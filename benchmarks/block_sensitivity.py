@@ -1,0 +1,35 @@
+"""TPU-adaptation ablation (DESIGN.md §3): how much of the paper's per-vertex
+async round reduction survives block Gauss-Seidel, as a function of block
+size bs (VMEM tile granularity) and inner sweeps."""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_GRAPHS, run_one, save_json
+from repro.core import metric
+from repro.core.gograph import gograph_order
+from repro.engine import get_algorithm, run_sync, run_async_block
+
+
+def run(out_dir: str = "experiments/paper"):
+    rows = []
+    results = {}
+    g = BENCH_GRAPHS["wk-like"]()
+    rank = gograph_order(g)
+    algo = get_algorithm("pagerank", g)
+    algo_gg = algo.relabel(rank)
+    sync_rounds = run_sync(algo).rounds
+    results["sync_default"] = sync_rounds
+    for bs in (32, 64, 128, 256, 512):
+        for inner in (1, 2):
+            r_def = run_async_block(algo, bs=bs, inner=inner)
+            r_gg = run_async_block(algo_gg, bs=bs, inner=inner)
+            fresh = metric.block_fresh_fraction(g, rank, bs)
+            results[f"bs{bs}_inner{inner}"] = {
+                "rounds_default": r_def.rounds,
+                "rounds_gograph": r_gg.rounds,
+                "block_fresh_gograph": fresh["fresh"],
+            }
+            rows.append((f"block_sens/bs{bs}_in{inner}", 0.0,
+                         f"sync={sync_rounds} asyncDef={r_def.rounds} "
+                         f"asyncGG={r_gg.rounds} fresh={fresh['fresh']:.2f}"))
+    save_json(out_dir, "block_sensitivity", results)
+    return rows

@@ -1,0 +1,63 @@
+"""Shared harness for the paper-experiment benchmarks.
+
+Each benchmark module exposes run(out_dir) -> list of CSV rows
+(name, us_per_call, derived). Graph sizes are chosen so the full suite
+finishes on one CPU core; every generator scales to the paper's sizes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import baselines, metric
+from repro.core.gograph import gograph_order
+from repro.engine import get_algorithm, run_sync, run_async_block
+from repro.graphs import generators as gen
+
+OUT_DEFAULT = "experiments/paper"
+
+# name -> (graph thunk, weighted variant needed)
+BENCH_GRAPHS = {
+    "ic-like": lambda: gen.scrambled(gen.powerlaw_cluster(4000, 6, p=0.5, seed=1), seed=11),
+    "wk-like": lambda: gen.scrambled(gen.barabasi_albert(8000, 3, seed=4), seed=12),
+    "cp-like": lambda: gen.scrambled(gen.erdos_renyi(6000, 5.0, seed=5), seed=13),
+    "lj-like": lambda: gen.scrambled(gen.community_graph(6000, 60, 7.0, 0.85, seed=6), seed=14),
+}
+
+ALGOS = ["pagerank", "sssp", "bfs", "php"]  # the paper's four workloads
+
+
+def reorderers(seed: int = 0):
+    rs = baselines.all_reorderers(seed)
+    rs.pop("Random", None)  # the paper's competitor set
+    return rs
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def run_one(graph, algo_name, rank, bs=64, mode="async", inner=2):
+    """inner=2 is the TPU-native async configuration: one VMEM-local
+    re-iteration per block makes the intra-block (community) edges that
+    clustering orderings concentrate FRESH, at zero extra HBM traffic.
+    Orderings without intra-block structure are unaffected (measured in
+    block_sensitivity.py), so the comparison stays fair."""
+    g = graph if algo_name != "sssp" else gen.with_random_weights(graph, seed=3)
+    algo = get_algorithm(algo_name, g)
+    if rank is not None:
+        algo = algo.relabel(rank)
+    if mode == "sync":
+        return run_sync(algo)
+    return run_async_block(algo, bs=bs, inner=inner)
+
+
+def save_json(out_dir: str, name: str, payload) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)

@@ -1,0 +1,29 @@
+"""Paper Fig. 12 / §V-H: Barabasi-Albert graphs with average degree
+2/4/6/8 — PageRank rounds & runtime per reorderer (n scaled down; the
+paper uses 1M vertices)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import reorderers, run_one, save_json
+from repro.graphs import generators as gen
+
+
+def run(out_dir: str = "experiments/paper"):
+    rows = []
+    results = {}
+    for m in (1, 2, 3, 4):  # BA attachment -> avg degree ~2m
+        g = gen.scrambled(gen.barabasi_albert(5000, m, seed=m), seed=21)
+        results[f"avg_deg_{2*m}"] = {}
+        for rname, rfn in reorderers().items():
+            rank = rfn(g) if rname != "Default" else None
+            t0 = time.perf_counter()
+            r = run_one(g, "pagerank", rank)
+            results[f"avg_deg_{2*m}"][rname] = {
+                "rounds": r.rounds, "runtime_s": time.perf_counter() - t0,
+            }
+        gg = results[f"avg_deg_{2*m}"]["GoGraph"]["rounds"]
+        dflt = results[f"avg_deg_{2*m}"]["Default"]["rounds"]
+        rows.append((f"fig12/deg{2*m}", 0.0, f"rounds GoGraph={gg} Default={dflt}"))
+    save_json(out_dir, "fig12_degrees", results)
+    return rows

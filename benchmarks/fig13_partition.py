@@ -1,0 +1,29 @@
+"""Paper Fig. 13: the impact of the partitioning method inside GoGraph
+(labelprop ~ Rabbit-Partition default; louvain; fennel; bfs)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BENCH_GRAPHS, run_one, save_json
+from repro.core import metric
+from repro.core.gograph import GoGraphConfig, gograph_order
+
+
+def run(out_dir: str = "experiments/paper"):
+    rows = []
+    results = {}
+    g = BENCH_GRAPHS["lj-like"]()
+    for method in ("labelprop", "louvain", "fennel", "bfs"):
+        t0 = time.perf_counter()
+        rank = gograph_order(g, GoGraphConfig(partition_method=method))
+        reorder_s = time.perf_counter() - t0
+        r = run_one(g, "pagerank", rank)
+        results[method] = {
+            "M_over_E": metric.positive_edge_fraction(g, rank),
+            "rounds": r.rounds,
+            "reorder_s": reorder_s,
+        }
+        rows.append((f"fig13/{method}", reorder_s * 1e6,
+                     f"M/E={results[method]['M_over_E']:.3f} rounds={r.rounds}"))
+    save_json(out_dir, "fig13_partition", results)
+    return rows

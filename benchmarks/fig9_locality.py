@@ -1,0 +1,54 @@
+"""Paper Fig. 9/10 analogue: locality proxies instead of CPU cache misses.
+
+This container cannot measure cache misses; DESIGN.md §3 maps the paper's
+cache argument to two measurable structure-level quantities:
+  * mean edge span |p(u)-p(v)|  (reuse distance proxy)
+  * distinct column-blocks per BSR row-block (= state-tile DMAs per block
+    update on TPU)
+Also reproduces Fig. 10's partition ablation: GoGraph with vs without the
+divide phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import BENCH_GRAPHS, reorderers, save_json
+from repro.core import metric
+from repro.core.gograph import GoGraphConfig, gograph_order
+from repro.graphs.blocked import pack_bsr
+from repro.graphs.graph import Graph
+
+
+def run(out_dir: str = "experiments/paper"):
+    rows = []
+    results = {}
+    bs = 64
+    for gname in ("ic-like", "lj-like"):
+        g = BENCH_GRAPHS[gname]()
+        results[gname] = {}
+        for rname, rfn in reorderers().items():
+            rank = rfn(g)
+            g2 = g.relabel(rank)
+            bsr = pack_bsr(g2, bs)
+            stats = bsr.stats()
+            results[gname][rname] = {
+                "edge_span": metric.edge_span(g, rank),
+                "colblocks_per_rowblock": stats["mean_colblocks_per_rowblock"],
+            }
+        # Fig. 10 ablation: GoGraph without partitioning (single subgraph)
+        rank_nopart = gograph_order(
+            g, GoGraphConfig(partition_method="bfs", max_subgraph=g.n)
+        )
+        g2 = g.relabel(rank_nopart)
+        results[gname]["GoGraph_nopartition"] = {
+            "edge_span": metric.edge_span(g, rank_nopart),
+            "colblocks_per_rowblock": pack_bsr(g2, bs).stats()[
+                "mean_colblocks_per_rowblock"],
+        }
+        gg = results[gname]["GoGraph"]["colblocks_per_rowblock"]
+        dflt = results[gname]["Default"]["colblocks_per_rowblock"]
+        rows.append((f"fig9/{gname}", 0.0,
+                     f"DMA proxy: GoGraph={gg:.1f} Default={dflt:.1f} "
+                     f"({1 - gg / dflt:.1%} fewer)"))
+    save_json(out_dir, "fig9_locality", results)
+    return rows

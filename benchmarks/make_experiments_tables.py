@@ -1,0 +1,98 @@
+"""Regenerate the machine-made sections of EXPERIMENTS.md from the dry-run
+JSONs and the paper-benchmark JSONs. Invoked by hand after sweeps:
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "—"
+    return f"{x:.{nd}f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | compile | mem/dev (TPU est) | fits 16G | T_compute | T_memory | T_collective | dominant | useful F ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("tag"):
+            continue
+        if not r.get("applicable"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"SKIP | — | — |"
+            )
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f}s "
+            f"| {m['tpu_est_bytes']/1e9:.1f}G | {'yes' if m['fits_16g'] else 'NO'} "
+            f"| {rl['t_compute_s']*1e3:.1f}ms | {rl['t_memory_s']*1e3:.1f}ms "
+            f"| {rl['t_collective_s']*1e3:.1f}ms | {rl['dominant']} "
+            f"| {fmt(r.get('useful_flops_ratio'), 2)} "
+            f"| {fmt(r.get('roofline_fraction'), 3)} |"
+        )
+    return "\n".join(lines)
+
+
+def skip_list() -> str:
+    out = []
+    for f in sorted(glob.glob("experiments/dryrun/*__pod_16x16.json")):
+        r = json.load(open(f))
+        if not r.get("applicable") and not r.get("tag"):
+            out.append(f"* **{r['arch']} × {r['shape']}** — {r['skip_reason']}")
+    return "\n".join(out)
+
+
+def hillclimb_rows(pattern: str) -> str:
+    lines = [
+        "| tag | T_compute | T_memory | T_collective | dominant | useful | frac | mem/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob(pattern), key=os.path.getmtime):
+        r = json.load(open(f))
+        if "error" in r:
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r.get('tag') or 'baseline'} | {rl['t_compute_s']:.3f}s "
+            f"| {rl['t_memory_s']:.3f}s | {rl['t_collective_s']:.3f}s "
+            f"| {rl['dominant']} | {fmt(r.get('useful_flops_ratio'),2)} "
+            f"| {fmt(r.get('roofline_fraction'),3)} "
+            f"| {r['memory']['tpu_est_bytes']/1e9:.1f}G |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    parts = {
+        "DRYRUN_SINGLE": dryrun_table("pod_16x16"),
+        "DRYRUN_MULTI": dryrun_table("multipod_2x16x16"),
+        "SKIPS": skip_list(),
+        "HC_XLSTM": hillclimb_rows("experiments/hillclimb/xlstm-350m__train_4k__pod_16x16*.json"),
+        "HC_GEMMA": hillclimb_rows("experiments/hillclimb/gemma-7b__prefill_32k__pod_16x16*.json"),
+        "HC_INTERNVL": hillclimb_rows("experiments/hillclimb/internvl2-76b__train_4k__pod_16x16*.json"),
+    }
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/generated_tables.json", "w") as f:
+        json.dump(parts, f)
+    for k, v in parts.items():
+        print(f"=== {k} ===")
+        print(v)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table_rows(recs, mesh: str = "pod_16x16", tag: str = ""):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        if not r.get("applicable"):
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "status": "skip",
+                "note": r.get("skip_reason", ""),
+            })
+            continue
+        if "error" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "FAIL", "note": r["error"][:80]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_ms": rl["t_compute_s"] * 1e3,
+            "t_memory_ms": rl["t_memory_s"] * 1e3,
+            "t_collective_ms": rl["t_collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful_ratio": r.get("useful_flops_ratio"),
+            "roofline_fraction": r.get("roofline_fraction"),
+            "mem_gb": r["memory"]["tpu_est_bytes"] / 1e9,
+            "fits_16g": bool(r["memory"]["fits_16g"]),
+        })
+    return rows
+
+
+def run(out_dir: str = "experiments/paper"):
+    recs = load_records()
+    rows_out = []
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        for row in table_rows(recs, mesh):
+            if row["status"] == "ok":
+                rows_out.append((
+                    f"roofline/{mesh}/{row['arch']}/{row['shape']}", 0.0,
+                    f"dom={row['dominant']} frac={row['roofline_fraction']:.3f} "
+                    f"mem={row['mem_gb']:.1f}G fits={row['fits_16g']}",
+                ))
+            else:
+                rows_out.append((
+                    f"roofline/{mesh}/{row['arch']}/{row['shape']}", 0.0,
+                    row["status"] + " " + row.get("note", "")[:60],
+                ))
+    return rows_out

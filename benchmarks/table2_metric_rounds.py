@@ -1,0 +1,42 @@
+"""Paper Table II: M(.) values of each reordering method and the number of
+iteration rounds of PageRank/SSSP/BFS/PHP under each order (CP-like graph).
+
+Claim under test: larger M  =>  fewer rounds; GoGraph has the largest M and
+the smallest round counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_GRAPHS, ALGOS, reorderers, run_one, save_json, timed
+from repro.core import metric
+
+
+def run(out_dir: str = "experiments/paper"):
+    g = BENCH_GRAPHS["cp-like"]()
+    rows = []
+    table = {}
+    for name, fn in reorderers().items():
+        rank, reorder_us = timed(fn, g)
+        m = metric.metric_m(g, rank)
+        rounds = {}
+        for algo in ALGOS:
+            r = run_one(g, algo, rank)
+            rounds[algo] = r.rounds
+        table[name] = {
+            "M": int(m), "M_over_E": m / g.m, "rounds": rounds,
+            "reorder_us": reorder_us,
+        }
+        rows.append((f"table2/{name}", reorder_us,
+                     f"M/E={m / g.m:.3f} rounds={rounds}"))
+    # correlation check: M vs rounds must be negative for every algorithm
+    ms = [v["M"] for v in table.values()]
+    corr = {}
+    for algo in ALGOS:
+        rs = [v["rounds"][algo] for v in table.values()]
+        corr[algo] = float(np.corrcoef(ms, rs)[0, 1])
+    gg = table["GoGraph"]
+    assert gg["M"] == max(v["M"] for v in table.values()), "GoGraph must maximize M"
+    save_json(out_dir, "table2_metric_rounds", {"table": table, "corr_M_rounds": corr})
+    rows.append(("table2/corr", 0.0, f"corr(M,rounds)={corr}"))
+    return rows

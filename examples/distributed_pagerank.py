@@ -1,0 +1,50 @@
+"""Distributed graph engine demo: vertex-sharded PageRank over a device
+mesh (sync across shards, Gauss-Seidel within), with GoGraph keeping
+cross-shard edges scarce.
+
+Run with multiple host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_pagerank.py
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.core import metric
+from repro.core.gograph import gograph_order
+from repro.engine import get_algorithm, run_async_block
+from repro.engine.distributed import run_distributed
+from repro.graphs import generators as gen
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    g = gen.scrambled(gen.powerlaw_cluster(20_000, 5, seed=1), seed=3)
+    rank = gograph_order(g)
+    algo = get_algorithm("pagerank", g).relabel(rank)
+
+    # fraction of edges that stay within a shard (the GoGraph locality win)
+    ndev = len(jax.devices())
+    shard = (np.arange(g.n) * ndev) // g.n
+    g2 = g.relabel(rank)
+    intra = float(np.mean(shard[g2.src] == shard[g2.dst]))
+    print(f"intra-shard edge fraction after GoGraph: {intra:.2f}")
+
+    r_single = run_async_block(algo, bs=64)
+    r_dist = run_distributed(algo, bs=64)
+    err = np.max(np.abs(r_dist.x - algo.exact()))
+    print(f"single-device async rounds: {r_single.rounds}")
+    print(f"{ndev}-device hybrid rounds: {r_dist.rounds} (err {err:.1e})")
+    print("cross-shard staleness costs rounds; locality keeps it bounded "
+          "(DESIGN.md §3)")
+
+
+if __name__ == "__main__":
+    main()

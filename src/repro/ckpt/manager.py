@@ -1,0 +1,144 @@
+"""Sharded, atomic, elastic-remesh checkpointing.
+
+Layout per step:
+    <dir>/step_000123.tmp/        (written first)
+        manifest.json             (tree structure, shapes, dtypes, mesh shape)
+        arr_00000.npy ...         (one .npy per leaf, *full* array)
+    <dir>/step_000123/            (atomic rename on completion)
+
+Design notes for the 1000+-node posture:
+  * atomicity: a checkpoint is visible iff its directory lost the ``.tmp``
+    suffix; a crash mid-write leaves only a .tmp that restore() ignores and
+    the next save() garbage-collects.
+  * elastic re-mesh: leaves are stored unsharded with their full logical
+    shape, so restore(target_shardings=...) can re-shard onto ANY mesh
+    (checkpoints taken on (16,16) restore onto (2,16,16) or a degraded
+    (15,16) rescue mesh). ``np.load(mmap_mode="r")`` + per-shard slicing
+    keeps host memory at one shard, not one array, for the big tables.
+  * retention: keep_last newest checkpoints are retained, older deleted.
+  * multi-host: in a real deployment each host writes only the shards it
+    owns (jax.experimental array serialization); this single-process
+    implementation writes full arrays but restores shard-by-shard, which is
+    the path that matters for elasticity.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None):
+        tree = {"params": params}
+        if opt_state is not None:
+            tree["opt"] = opt_state
+        flat, treedef = jax.tree.flatten(tree)
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "n_leaves": len(flat),
+            "leaves": [],
+            "extra": extra or {},
+        }
+        # the tree structure is recorded as key paths (robust across versions)
+        paths = [jax.tree_util.keystr(kp) for kp, _ in jax.tree.flatten_with_path(tree)[0]]
+        manifest["paths"] = paths
+        for i, leaf in enumerate(flat):
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
+            manifest["leaves"].append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype), "path": paths[i],
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({k: v for k, v in manifest.items() if k != "treedef"}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+        # clean dead tmps
+        for d in os.listdir(self.dir):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, template=None, shardings=None):
+        """Restore a pytree.
+
+        template: pytree with the same structure (e.g. abstract params);
+        shardings: matching pytree of NamedSharding — when given, each leaf is
+        materialized shard-by-shard from a memory-mapped .npy, enabling
+        restore onto a different mesh than the one that saved (elastic).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoints in " + self.dir)
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        n = manifest["n_leaves"]
+        arrays = []
+        shard_list = None
+        if shardings is not None and template is not None:
+            shard_list = jax.tree.flatten(shardings)[0]
+        for i in range(n):
+            path = os.path.join(d, f"arr_{i:05d}.npy")
+            if shard_list is not None:
+                mm = np.load(path, mmap_mode="r")
+                sh = shard_list[i]
+                arr = jax.make_array_from_callback(
+                    mm.shape, sh, lambda idx, _mm=mm: np.asarray(_mm[idx])
+                )
+            else:
+                arr = np.load(path)
+            arrays.append(arr)
+        if template is not None:
+            treedef = jax.tree.structure(template)
+            tree = jax.tree.unflatten(treedef, arrays)
+        else:
+            # reconstruct {params, opt} structure losslessly only with template;
+            # fall back to a flat dict keyed by path
+            tree = {manifest["leaves"][i]["path"]: arrays[i] for i in range(n)}
+        return tree, manifest
+
+    def restore_train_state(self, model, mesh, shardings, step=None):
+        """Convenience for the train loop: returns (params, opt, step)."""
+        shapes, _ = model.param_specs()
+        from repro.train.optim import init_opt_state
+        opt_shapes = jax.eval_shape(init_opt_state, shapes)
+        template = {"params": shapes, "opt": opt_shapes}
+        shard_tree = {"params": shardings["params"], "opt": shardings["opt"]}
+        tree, manifest = self.restore(step, template=template, shardings=shard_tree)
+        return tree["params"], tree["opt"], manifest["step"]

@@ -1,0 +1,24 @@
+# The paper's primary contribution: the M(.) metric over vertex processing
+# orders, the GoGraph divide-and-conquer reordering algorithm, and the
+# competitor reordering baselines it is evaluated against.
+from repro.core.metric import (
+    metric_m,
+    metric_m_jax,
+    positive_edge_fraction,
+    edge_span,
+    block_fresh_fraction,
+)
+from repro.core.gograph import gograph_order, GoGraphConfig
+from repro.core import baselines, partition
+
+__all__ = [
+    "metric_m",
+    "metric_m_jax",
+    "positive_edge_fraction",
+    "edge_span",
+    "block_fresh_fraction",
+    "gograph_order",
+    "GoGraphConfig",
+    "baselines",
+    "partition",
+]

@@ -1,0 +1,13 @@
+from repro.engine.algorithms import get_algorithm, ALGORITHMS, AlgoInstance
+from repro.engine.sync import run_sync
+from repro.engine.async_block import run_async_block
+from repro.engine.distributed import run_distributed
+
+__all__ = [
+    "get_algorithm",
+    "ALGORITHMS",
+    "AlgoInstance",
+    "run_sync",
+    "run_async_block",
+    "run_distributed",
+]

@@ -1,0 +1,136 @@
+"""Block Gauss–Seidel engine — the TPU adaptation of the paper's async mode.
+
+The paper's Eq. 2 updates vertices one at a time in processing order, each
+consuming neighbors already updated *this* round. A per-vertex sequential
+sweep is degenerate on TPU, so we process the order in contiguous *blocks*
+(DESIGN.md §3): blocks run sequentially inside one sweep, each block update
+gathers the *current* state vector — blocks earlier in the order therefore
+contribute this-round values (positive edges at block granularity), later
+blocks contribute previous-round values, exactly Eq. 2 lifted to tiles.
+
+`inner > 1` re-runs each block update against the refreshed state, making
+intra-block edges fresh too (local Gauss–Seidel refinement); `inner=1` is the
+plain blocked sweep. The engine assumes the algorithm instance has already
+been relabeled with the processing order (``AlgoInstance.relabel``), so block
+b covers ordinals [b*bs, (b+1)*bs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.algorithms import AlgoInstance
+from repro.engine.convergence import RunResult
+from repro.engine import jax_ops as J
+from repro.graphs.blocked import pack_in_edges, padded_n
+from repro.graphs.graph import Graph
+
+
+def _pack(algo: AlgoInstance, bs: int):
+    g = Graph(algo.n, algo.src, algo.dst, algo.w)
+    be = pack_in_edges(g, bs)
+    npad = padded_n(algo.n, bs)
+
+    def pad(a, fill):
+        out = np.full((npad,), fill, dtype=a.dtype)
+        out[: algo.n] = a
+        return out
+
+    x0 = pad(algo.x0, algo.semiring.identity)
+    c = pad(algo.c, 0.0 if algo.combine == "replace" else algo.c.dtype.type(algo.semiring.identity))
+    fixed = np.zeros(npad, bool)
+    fixed[: algo.n] = algo.fixed
+    fixed[algo.n:] = True  # padding vertices never move
+    return be, x0, c, fixed, npad
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "bs", "nb", "sem_reduce", "sem_edge", "comb", "res_kind",
+        "max_iters", "inner", "n_real",
+    ),
+)
+def _run(
+    esrc, edst, ew, emask, x0, c, fixed,
+    bs: int, nb: int, n_real: int,
+    sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
+    eps: float, max_iters: int, identity: float, inner: int,
+):
+    c_blk = c.reshape(nb, bs)
+    fixed_blk = fixed.reshape(nb, bs)
+    x0_blk = x0.reshape(nb, bs)
+    res_buf = jnp.zeros((max_iters,), jnp.float32)
+    sum_buf = jnp.zeros((max_iters,), jnp.float32)
+    real_mask = (jnp.arange(nb * bs) < n_real)
+
+    def block_update(i, x):
+        srcs = esrc[i]
+        msgs = J.edge_op(sem_edge, x[srcs], ew[i])
+        msgs = jnp.where(emask[i], msgs, identity)
+        agg = J.segment_reduce(sem_reduce, msgs, edst[i], bs, identity)
+        old = jax.lax.dynamic_slice(x, (i * bs,), (bs,))
+        new = J.combine(comb, agg, c_blk[i], old, fixed_blk[i], x0_blk[i])
+        return jax.lax.dynamic_update_slice(x, new, (i * bs,))
+
+    def block_body(i, x):
+        def one(_, xx):
+            return block_update(i, xx)
+        return jax.lax.fori_loop(0, inner, one, x)
+
+    def sweep(x):
+        return jax.lax.fori_loop(0, nb, block_body, x)
+
+    def cond(state):
+        _, k, res, _, _ = state
+        return jnp.logical_and(k < max_iters, res > eps)
+
+    def body(state):
+        x, k, _, res_buf, sum_buf = state
+        x_new = sweep(x)
+        res = J.residual(res_kind, jnp.where(real_mask, x_new, 0), jnp.where(real_mask, x, 0))
+        res_buf = res_buf.at[k].set(res)
+        sum_buf = sum_buf.at[k].set(
+            jnp.sum(jnp.where(real_mask & (jnp.abs(x_new) < 1e30), x_new, 0.0))
+        )
+        return x_new, k + 1, res, res_buf, sum_buf
+
+    init = (x0, jnp.int32(0), jnp.float32(jnp.inf), res_buf, sum_buf)
+    x, k, res, res_buf, sum_buf = jax.lax.while_loop(cond, body, init)
+    return x, k, res, res_buf, sum_buf
+
+
+def run_async_block(
+    algo: AlgoInstance, bs: int = 256, max_iters: int = 2000, inner: int = 1,
+    x_init: np.ndarray | None = None,
+) -> RunResult:
+    """x_init: resume from a previous state (checkpointed macro-stepping)."""
+    be, x0, c, fixed, npad = _pack(algo, bs)
+    x_start = x0
+    if x_init is not None:
+        x_start = x0.copy()
+        x_start[: algo.n] = x_init
+    x, k, res, res_buf, sum_buf = _run(
+        jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
+        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(c), jnp.asarray(fixed),
+        bs=bs, nb=be.nb, n_real=algo.n,
+        sem_reduce=algo.semiring.reduce,
+        sem_edge=algo.semiring.edge_op,
+        comb=algo.combine,
+        res_kind=algo.residual,
+        eps=algo.eps,
+        max_iters=max_iters,
+        identity=algo.semiring.identity,
+        inner=inner,
+    )
+    k = int(k)
+    return RunResult(
+        x=np.asarray(x)[: algo.n],
+        rounds=k,
+        converged=bool(res <= algo.eps),
+        residuals=np.asarray(res_buf)[:k],
+        state_sums=np.asarray(sum_buf)[:k],
+    )

@@ -1,0 +1,32 @@
+"""Convergence bookkeeping shared by the engines."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Outcome of an iterative run.
+
+    rounds counts *full passes over the edge set* (one synchronous round or
+    one asynchronous sweep both count 1), which is the unit the paper plots
+    in Fig. 6 — it makes sync and async modes directly comparable.
+    """
+
+    x: np.ndarray
+    rounds: int
+    converged: bool
+    residuals: np.ndarray  # per-round residual trace
+    state_sums: np.ndarray  # per-round sum(x) (for Fig. 7 convergence plots)
+
+    def distance_trace(self, x_star_sum: float) -> np.ndarray:
+        """dist_t = |sum x* - sum x_t| (paper §V-C)."""
+        return np.abs(x_star_sum - self.state_sums[: self.rounds])
+
+
+def trim_trace(residuals, sums, rounds: int) -> tuple[np.ndarray, np.ndarray]:
+    residuals = np.asarray(residuals)[:rounds]
+    sums = np.asarray(sums)[:rounds]
+    return residuals, sums

@@ -1,0 +1,174 @@
+"""Distributed engine: vertex blocks sharded across devices (shard_map).
+
+Execution model (DESIGN.md §3): *synchronous across shards, Gauss–Seidel
+within a shard*. Each device owns a contiguous range of blocks of the
+processing order. Per superstep every device sweeps its own blocks
+sequentially against a device-local copy of the full state vector (so its own
+earlier blocks contribute this-round values), then shards are re-assembled —
+one all-gather of the state vector per superstep.
+
+GoGraph's partition-locality objective minimizes cross-shard edges, which is
+exactly what keeps this hybrid close to fully-asynchronous Gauss–Seidel in
+rounds; the paper's single-machine claim transfers because intra-shard edges
+dominate after community-aware reordering.
+
+The per-superstep collective volume is |V|·4 bytes (the gathered state), vs.
+the edge set held shard-local — the same design large-scale systems (Gemini,
+Gluon) use for power-law graphs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.engine.algorithms import AlgoInstance
+from repro.engine.convergence import RunResult
+from repro.engine import jax_ops as J
+from repro.engine.async_block import _pack
+
+
+def _pad_blocks(arr: np.ndarray, nb_target: int, fill) -> np.ndarray:
+    nb = arr.shape[0]
+    if nb == nb_target:
+        return arr
+    pad = np.full((nb_target - nb,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def make_superstep(
+    mesh, axis: str, nb: int, bs: int,
+    sem_reduce: str, sem_edge: str, comb: str,
+    identity: float, inner: int = 1,
+):
+    """Build the jittable one-superstep function (also used by the dry-run)."""
+    ndev = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+    assert nb % ndev == 0
+    nb_local = nb // ndev
+    axis_name = axis
+
+    def superstep(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk):
+        # everything below sees the *local* shard of the blocked arrays and a
+        # replicated copy of the state vector
+        def inner_fn(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk):
+            dev = jax.lax.axis_index(axis_name)
+            # the carry becomes device-varying after the first block update;
+            # mark the replicated input as varying up-front
+            x_full = jax.lax.pvary(x_full, (axis_name,))
+
+            def block_update(j, x_work):
+                gi = dev * nb_local + j  # global block id
+                msgs = J.edge_op(sem_edge, x_work[esrc[j]], ew[j])
+                msgs = jnp.where(emask[j], msgs, identity)
+                agg = J.segment_reduce(sem_reduce, msgs, edst[j], bs, identity)
+                old = jax.lax.dynamic_slice(x_work, (gi * bs,), (bs,))
+                new = J.combine(comb, agg, c_blk[j], old, fixed_blk[j], x0_blk[j])
+                return jax.lax.dynamic_update_slice(x_work, new, (gi * bs,))
+
+            def block_body(j, x_work):
+                def one(_, xx):
+                    return block_update(j, xx)
+                return jax.lax.fori_loop(0, inner, one, x_work)
+
+            x_work = jax.lax.fori_loop(0, nb_local, block_body, x_full)
+            # each device contributes its own refreshed slice
+            dev0 = dev * nb_local * bs
+            return jax.lax.dynamic_slice(x_work, (dev0,), (nb_local * bs,))
+
+        return jax.shard_map(
+            inner_fn,
+            mesh=mesh,
+            in_specs=(P(None), P(axis_name), P(axis_name), P(axis_name),
+                      P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
+            out_specs=P(axis_name),
+        )(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk)
+
+    return superstep, nb_local
+
+
+def run_distributed(
+    algo: AlgoInstance,
+    mesh=None,
+    axis: str = "data",
+    bs: int = 256,
+    max_iters: int = 2000,
+    inner: int = 1,
+) -> RunResult:
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = jax.make_mesh(
+            (ndev,), (axis,), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+    ndev = mesh.shape[axis]
+
+    be, x0, c, fixed, npad = _pack(algo, bs)
+    nb = ((be.nb + ndev - 1) // ndev) * ndev
+    esrc = _pad_blocks(be.esrc, nb, 0)
+    edst = _pad_blocks(be.edst, nb, 0)
+    ew = _pad_blocks(be.ew, nb, 0.0)
+    emask = _pad_blocks(be.emask, nb, False)
+    npad2 = nb * bs
+
+    def padv(a, fill):
+        out = np.full((npad2,), fill, dtype=a.dtype)
+        out[: len(a)] = a
+        return out
+
+    x0 = padv(x0, algo.semiring.identity)
+    c = padv(c, 0.0)
+    fx = np.ones(npad2, bool)
+    fx[: npad] = fixed
+    c_blk = c.reshape(nb, bs)
+    fixed_blk = fx.reshape(nb, bs)
+    x0_blk = x0.reshape(nb, bs)
+
+    superstep, _ = make_superstep(
+        mesh, axis, nb, bs,
+        algo.semiring.reduce, algo.semiring.edge_op, algo.combine,
+        algo.semiring.identity, inner=inner,
+    )
+
+    real_mask = np.zeros(npad2, bool)
+    real_mask[: algo.n] = True
+    res_kind = algo.residual
+    eps = algo.eps
+
+    @partial(jax.jit, static_argnames=("max_iters",))
+    def _run(x0v, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk, real_mask, max_iters: int):
+        res_buf = jnp.zeros((max_iters,), jnp.float32)
+        sum_buf = jnp.zeros((max_iters,), jnp.float32)
+
+        def cond(state):
+            _, k, res, _, _ = state
+            return jnp.logical_and(k < max_iters, res > eps)
+
+        def body(state):
+            x, k, _, res_buf, sum_buf = state
+            x_new = superstep(x, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk)
+            res = J.residual(res_kind, jnp.where(real_mask, x_new, 0), jnp.where(real_mask, x, 0))
+            res_buf = res_buf.at[k].set(res)
+            sum_buf = sum_buf.at[k].set(
+                jnp.sum(jnp.where(real_mask & (jnp.abs(x_new) < 1e30), x_new, 0.0))
+            )
+            return x_new, k + 1, res, res_buf, sum_buf
+
+        init = (x0v, jnp.int32(0), jnp.float32(jnp.inf), res_buf, sum_buf)
+        return jax.lax.while_loop(cond, body, init)
+
+    with jax.set_mesh(mesh):
+        x, k, res, res_buf, sum_buf = _run(
+            jnp.asarray(x0), jnp.asarray(esrc), jnp.asarray(edst), jnp.asarray(ew),
+            jnp.asarray(emask), jnp.asarray(c_blk), jnp.asarray(fixed_blk),
+            jnp.asarray(x0_blk), jnp.asarray(real_mask), max_iters=max_iters,
+        )
+    k = int(k)
+    return RunResult(
+        x=np.asarray(x)[: algo.n],
+        rounds=k,
+        converged=bool(res <= algo.eps),
+        residuals=np.asarray(res_buf)[:k],
+        state_sums=np.asarray(sum_buf)[:k],
+    )

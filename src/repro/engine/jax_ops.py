@@ -1,0 +1,66 @@
+"""Shared jittable primitives for the iterative engines."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.algorithms import AlgoInstance, Semiring
+
+
+def edge_op(kind: str, x_src: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    if kind == "mul":
+        return x_src * w
+    if kind == "add":
+        return x_src + w
+    if kind == "min":
+        return jnp.minimum(x_src, w)
+    raise ValueError(kind)
+
+
+def segment_reduce(
+    kind: str, msgs: jnp.ndarray, dst: jnp.ndarray, n: int, identity: float
+) -> jnp.ndarray:
+    out = jnp.full((n,), identity, dtype=msgs.dtype)
+    if kind == "sum":
+        return out.at[dst].add(msgs)
+    if kind == "min":
+        return out.at[dst].min(msgs)
+    if kind == "max":
+        return out.at[dst].max(msgs)
+    raise ValueError(kind)
+
+
+def combine(
+    kind: str, agg: jnp.ndarray, c: jnp.ndarray, x_old: jnp.ndarray,
+    fixed: jnp.ndarray, x0: jnp.ndarray,
+) -> jnp.ndarray:
+    if kind == "replace":
+        x_new = c + agg
+    elif kind == "min_old":
+        x_new = jnp.minimum(x_old, jnp.minimum(c, agg))
+    elif kind == "max_old":
+        x_new = jnp.maximum(x_old, jnp.maximum(c, agg))
+    else:
+        raise ValueError(kind)
+    return jnp.where(fixed, x0, x_new)
+
+
+def residual(kind: str, x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
+    if kind == "linf":
+        return jnp.max(jnp.abs(x_new - x_old))
+    if kind == "l1":
+        return jnp.sum(jnp.abs(x_new - x_old))
+    if kind == "changed":
+        return jnp.sum((x_new != x_old).astype(jnp.float32))
+    raise ValueError(kind)
+
+
+def device_arrays(algo: AlgoInstance) -> dict[str, jnp.ndarray]:
+    return {
+        "src": jnp.asarray(algo.src),
+        "dst": jnp.asarray(algo.dst),
+        "w": jnp.asarray(algo.w),
+        "x0": jnp.asarray(algo.x0),
+        "c": jnp.asarray(algo.c),
+        "fixed": jnp.asarray(algo.fixed),
+    }

@@ -1,0 +1,134 @@
+"""Priority-scheduled block engine (Priter [52] adapted to blocks).
+
+The paper's related work notes that *prioritized* asynchronous execution —
+updating only the vertices whose state is farthest from convergence — avoids
+wasted work. At block granularity this becomes: per scheduling round, select
+the top-k blocks by accumulated priority and update only those.
+
+Priority bookkeeping is done on the block dependency graph (derived from the
+same BSR packing the kernels use): when block i's state moves by |delta_i|,
+every dependent block j (one with edges i -> j) inherits priority mass
+``D[j, i] * |delta_i|``, where D is the dense block-adjacency indicator —
+an (nb x nb) matmul per round, negligible next to the block updates.
+
+Work is measured in *block updates*; a full sweep costs nb. The benchmark
+(`benchmarks/priority_sched.py`) shows priority scheduling reaches the same
+fixpoint in a fraction of the edge-work of full sweeps, and composes with
+the GoGraph ordering (fresher selected blocks) — extending the paper's
+scheduling story beyond its own experiments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.algorithms import AlgoInstance
+from repro.engine.convergence import RunResult
+from repro.engine import jax_ops as J
+from repro.engine.async_block import _pack
+from repro.graphs.graph import Graph
+
+
+def _block_dependency(algo: AlgoInstance, bs: int, nb: int) -> np.ndarray:
+    """D[j, i] = 1 iff an edge runs from block i into block j."""
+    bi = np.minimum(algo.dst // bs, nb - 1)
+    bk = np.minimum(algo.src // bs, nb - 1)
+    D = np.zeros((nb, nb), np.float32)
+    D[bi, bk] = 1.0
+    return D
+
+
+@partial(
+    jax.jit,
+    static_argnames=("bs", "nb", "k_sel", "n_real", "sem_reduce", "sem_edge",
+                     "comb", "res_kind", "max_rounds"),
+)
+def _run(
+    esrc, edst, ew, emask, x0, c, fixed, dep,
+    bs: int, nb: int, k_sel: int, n_real: int,
+    sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
+    eps: float, max_rounds: int, identity: float,
+):
+    c_blk = c.reshape(nb, bs)
+    fixed_blk = fixed.reshape(nb, bs)
+    x0_blk = x0.reshape(nb, bs)
+    real_mask = (jnp.arange(nb * bs) < n_real)
+
+    def block_update(i, x):
+        msgs = J.edge_op(sem_edge, x[esrc[i]], ew[i])
+        msgs = jnp.where(emask[i], msgs, identity)
+        agg = J.segment_reduce(sem_reduce, msgs, edst[i], bs, identity)
+        old = jax.lax.dynamic_slice(x, (i * bs,), (bs,))
+        new = J.combine(comb, agg, c_blk[i], old, fixed_blk[i], x0_blk[i])
+        delta = jnp.sum(jnp.abs(jnp.where(jnp.abs(new) < 1e30, new, 0)
+                                - jnp.where(jnp.abs(old) < 1e30, old, 0)))
+        return jax.lax.dynamic_update_slice(x, new, (i * bs,)), delta
+
+    def round_fn(state):
+        x, prio, k, res, tot_updates = state
+        _, sel = jax.lax.top_k(prio, k_sel)
+
+        def body(t, carry):
+            x, deltas = carry
+            i = sel[t]
+            x, d = block_update(i, x)
+            return x, deltas.at[t].set(d)
+
+        x_new, deltas = jax.lax.fori_loop(
+            0, k_sel, body, (x, jnp.zeros((k_sel,), jnp.float32))
+        )
+        # processed blocks hand their priority to dependents
+        delta_vec = jnp.zeros((nb,), jnp.float32).at[sel].set(deltas)
+        prio = prio.at[sel].set(0.0)
+        prio = prio + dep @ delta_vec
+        # stop only when this round moved nothing AND no pending priority
+        # remains anywhere (selected-quiet != converged)
+        res = jnp.maximum(jnp.sum(delta_vec), jnp.max(prio))
+        return x_new, prio, k + 1, res, tot_updates + k_sel
+
+    def cond(state):
+        _, _, k, res, _ = state
+        return jnp.logical_and(k < max_rounds, res > eps)
+
+    init = (x0, jnp.full((nb,), 1e30, jnp.float32), jnp.int32(0),
+            jnp.float32(jnp.inf), jnp.int32(0))
+    x, prio, k, res, tot = jax.lax.while_loop(cond, round_fn, init)
+    return x, k, res, tot
+
+
+def run_priority_block(
+    algo: AlgoInstance, bs: int = 128, select_frac: float = 0.25,
+    max_rounds: int = 20000,
+) -> RunResult:
+    """Returns a RunResult whose `rounds` is *equivalent full sweeps*
+    (total block updates / nb) — directly comparable to the other engines'
+    round counts in work terms."""
+    be, x0, c, fixed, npad = _pack(algo, bs)
+    nb = be.nb
+    k_sel = max(1, int(round(nb * select_frac)))
+    dep = _block_dependency(algo, bs, nb)
+    # priority scheduling needs an accumulated-change signal; for "changed"
+    # algorithms (SSSP/BFS/CC) the L1 delta works identically
+    eps = algo.eps if algo.residual != "linf" else algo.eps * max(1, algo.n) * 0.01
+    x, k, res, tot = _run(
+        jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
+        jnp.asarray(be.emask), jnp.asarray(x0), jnp.asarray(c),
+        jnp.asarray(fixed), jnp.asarray(dep),
+        bs=bs, nb=nb, k_sel=k_sel, n_real=algo.n,
+        sem_reduce=algo.semiring.reduce, sem_edge=algo.semiring.edge_op,
+        comb=algo.combine, res_kind=algo.residual,
+        eps=float(eps), max_rounds=max_rounds,
+        identity=algo.semiring.identity,
+    )
+    xr = np.asarray(x)[: algo.n]
+    finite = xr[np.abs(xr) < 1e30]
+    return RunResult(
+        x=xr,
+        rounds=float(tot) / nb,
+        converged=bool(res <= eps),
+        residuals=np.asarray([float(res)]),
+        state_sums=np.asarray([float(finite.sum()) if len(finite) else 0.0]),
+    )

@@ -1,0 +1,4 @@
+from repro.graphs.graph import Graph
+from repro.graphs import generators, io, blocked
+
+__all__ = ["Graph", "generators", "io", "blocked"]

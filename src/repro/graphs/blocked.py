@@ -1,0 +1,165 @@
+"""Block packing of a (reordered) graph for the TPU engines and kernels.
+
+The TPU adaptation of the paper's asynchronous mode works on contiguous
+*blocks* of the processing order (DESIGN.md §3). Two packings are built here:
+
+* :class:`BlockedInEdges` — per-destination-block padded in-edge lists, used by
+  the pure-JAX block Gauss–Seidel engine (`engine/async_block.py`). Gather/
+  segment-reduce friendly.
+
+* :class:`BSRMatrix` — block-sparse rows of dense (bs × bs) tiles of the
+  in-adjacency matrix, used by the Pallas kernels (`kernels/bsr_spmm.py`).
+  After GoGraph reordering + community partitioning the matrix is block-
+  concentrated, so the number of tiles per row-block (= DMAs per output tile
+  on TPU) is small; `stats()` reports exactly that locality proxy.
+
+Both packings order edges the same way so engines agree bit-for-bit in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+
+def num_blocks(n: int, bs: int) -> int:
+    return (n + bs - 1) // bs
+
+
+def padded_n(n: int, bs: int) -> int:
+    return num_blocks(n, bs) * bs
+
+
+@dataclasses.dataclass
+class BlockedInEdges:
+    """Padded per-destination-block in-edge lists.
+
+    For destination block i, edge slot j:
+      esrc[i, j]   global source vertex id (0 for pads)
+      edst[i, j]   destination vertex id *local to the block* (0 for pads)
+      ew[i, j]     edge weight (0 for pads; pads also masked)
+      emask[i, j]  True for real edges
+    """
+
+    bs: int
+    n: int  # real vertex count (before padding)
+    esrc: np.ndarray
+    edst: np.ndarray
+    ew: np.ndarray
+    emask: np.ndarray
+
+    @property
+    def nb(self) -> int:
+        return self.esrc.shape[0]
+
+    @property
+    def e_max(self) -> int:
+        return self.esrc.shape[1]
+
+
+def pack_in_edges(g: Graph, bs: int) -> BlockedInEdges:
+    nb = num_blocks(g.n, bs)
+    blk = g.dst // bs
+    order = np.argsort(blk, kind="stable")
+    src_s, dst_s, w_s = g.src[order], g.dst[order], g.weights[order]
+    counts = np.bincount(blk, minlength=nb)
+    e_max = max(1, int(counts.max()) if len(counts) else 1)
+    esrc = np.zeros((nb, e_max), dtype=np.int32)
+    edst = np.zeros((nb, e_max), dtype=np.int32)
+    ew = np.zeros((nb, e_max), dtype=np.float32)
+    emask = np.zeros((nb, e_max), dtype=bool)
+    offsets = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    for i in range(nb):
+        lo, hi = offsets[i], offsets[i + 1]
+        k = hi - lo
+        esrc[i, :k] = src_s[lo:hi]
+        edst[i, :k] = dst_s[lo:hi] - i * bs
+        ew[i, :k] = w_s[lo:hi]
+        emask[i, :k] = True
+    return BlockedInEdges(bs=bs, n=g.n, esrc=esrc, edst=edst, ew=ew, emask=emask)
+
+
+@dataclasses.dataclass
+class BSRMatrix:
+    """Block-sparse in-adjacency: y_blk[i] = reduce_k tiles[i,k] (x_blk[cols[i,k]]).
+
+    tiles[i, k] has layout (dst_local, src_local): row r of tile (i,k) holds the
+    weights of edges into vertex i*bs+r from vertices cols[i,k]*bs + c.
+    Padding tiles point at column-block 0 with `fill` values so semiring
+    reduction ignores them (0 for plus_times, +inf for min_plus).
+    """
+
+    bs: int
+    n: int
+    cols: np.ndarray      # int32[nb, k_max]
+    colmask: np.ndarray   # bool[nb, k_max]
+    tiles: np.ndarray     # float32[nb, k_max, bs, bs]
+    fill: float
+
+    @property
+    def nb(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.cols.shape[1]
+
+    def stats(self) -> dict:
+        """Locality proxies (the TPU analogue of the paper's cache-miss study)."""
+        nnz_blocks = int(self.colmask.sum())
+        per_row = self.colmask.sum(axis=1)
+        diag = 0
+        for i in range(self.nb):
+            diag += int(np.any(self.cols[i][self.colmask[i]] == i))
+        return {
+            "nb": self.nb,
+            "k_max": self.k_max,
+            "nnz_blocks": nnz_blocks,
+            "mean_colblocks_per_rowblock": float(per_row.mean()) if self.nb else 0.0,
+            "max_colblocks_per_rowblock": int(per_row.max()) if self.nb else 0,
+            "diag_fraction": diag / max(1, self.nb),
+            "tile_bytes": int(self.tiles.nbytes),
+        }
+
+
+def pack_bsr(g: Graph, bs: int, fill: float = 0.0) -> BSRMatrix:
+    nb = num_blocks(g.n, bs)
+    bi = (g.dst // bs).astype(np.int64)  # row (dst) block
+    bk = (g.src // bs).astype(np.int64)  # col (src) block
+    key = bi * nb + bk
+    order = np.argsort(key, kind="stable")
+    src_s, dst_s, w_s, key_s = g.src[order], g.dst[order], g.weights[order], key[order]
+    uniq, start = np.unique(key_s, return_index=True)
+    start = np.append(start, len(key_s))
+    rows = (uniq // nb).astype(np.int64)
+    cols_of = (uniq % nb).astype(np.int64)
+    per_row = np.bincount(rows, minlength=nb)
+    k_max = max(1, int(per_row.max()) if nb else 1)
+    cols = np.zeros((nb, k_max), dtype=np.int32)
+    colmask = np.zeros((nb, k_max), dtype=bool)
+    tiles = np.full((nb, k_max, bs, bs), fill, dtype=np.float32)
+    slot = np.zeros(nb, dtype=np.int64)
+    for t in range(len(uniq)):
+        i, k = rows[t], cols_of[t]
+        s = slot[i]
+        slot[i] += 1
+        cols[i, s] = k
+        colmask[i, s] = True
+        lo, hi = start[t], start[t + 1]
+        r = dst_s[lo:hi] - i * bs
+        c = src_s[lo:hi] - k * bs
+        tiles[i, s, r, c] = w_s[lo:hi]
+    return BSRMatrix(bs=bs, n=g.n, cols=cols, colmask=colmask, tiles=tiles, fill=fill)
+
+
+def pad_state(x: np.ndarray, bs: int, fill: float = 0.0) -> np.ndarray:
+    """Pad a per-vertex state array (n, ...) up to a whole number of blocks."""
+    n = x.shape[0]
+    np_ = padded_n(n, bs)
+    if np_ == n:
+        return x
+    pad_width = [(0, np_ - n)] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, pad_width, constant_values=fill)

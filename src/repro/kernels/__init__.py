@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the paper's compute hot-spot: the per-round vertex
+# update sweep. Two kernels:
+#   bsr_spmm  — one synchronous round as block-sparse-matrix x dense-states
+#               (plus_times on the MXU, min_plus on the VPU)
+#   gs_sweep  — one *asynchronous* block Gauss-Seidel sweep as a single fused
+#               kernel, exploiting the TPU's sequential grid execution so
+#               later blocks consume earlier blocks' freshly written states
+#               (the paper's Eq. 2 at tile granularity)
+# ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
+from repro.kernels.ops import bsr_spmm, gs_sweep
+
+__all__ = ["bsr_spmm", "gs_sweep"]

@@ -1,0 +1,136 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret=None` auto-selects: real kernel lowering on TPU, interpret mode on
+CPU (this container), so the same call sites work in both worlds. The
+wrappers also provide `pack_algorithm`, which turns an `AlgoInstance` (with
+its transformed edge weights) into kernel-ready BSR operands, and
+`run_async_block_pallas`, a full async engine whose per-sweep work is the
+fused gs_sweep kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.algorithms import AlgoInstance, BIG
+from repro.engine.convergence import RunResult
+from repro.graphs.blocked import pack_bsr, padded_n
+from repro.graphs.graph import Graph
+from repro.kernels.bsr_spmm import bsr_spmm_pallas
+from repro.kernels.gs_sweep import gs_sweep_pallas
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def bsr_spmm(cols, tiles, x, *, semiring="plus_times", dj=None, interpret=None):
+    bs = tiles.shape[-1]
+    d = x.shape[1]
+    if dj is None:
+        # min_plus materializes (bs, bs, dj); keep it within ~2 MiB fp32
+        dj = d if semiring == "plus_times" else max(1, min(d, (512 * 1024) // (bs * bs * 4)))
+        while d % dj:
+            dj -= 1
+    return bsr_spmm_pallas(
+        cols, tiles, x, semiring=semiring, bs=bs, dj=dj,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def gs_sweep(cols, tiles, c, x0, fixed, x, *, semiring="plus_times",
+             combine="replace", interpret=None):
+    bs = tiles.shape[-1]
+    return gs_sweep_pallas(
+        cols, tiles, c, x0, fixed, x, semiring=semiring, combine=combine,
+        bs=bs, interpret=_auto_interpret(interpret),
+    )
+
+
+# ---------------------------------------------------------------------------
+# AlgoInstance -> kernel operands
+# ---------------------------------------------------------------------------
+
+def pack_algorithm(algo: AlgoInstance, bs: int, d: int = 1) -> dict:
+    """Pack an algorithm's graph + vectors into BSR kernel operands.
+
+    The state is (n_padded, d); scalar algorithms use d=1 (interpret mode) —
+    on a real TPU you'd batch d>=128 sources per sweep to fill the lanes.
+    """
+    semiring = "plus_times" if algo.semiring.reduce == "sum" else "min_plus"
+    if algo.semiring.reduce == "max":
+        raise NotImplementedError("max-semirings: negate and use min_plus")
+    fill = 0.0 if semiring == "plus_times" else float(BIG)
+    g = Graph(algo.n, algo.src, algo.dst, algo.w)
+    bsr = pack_bsr(g, bs, fill=fill)
+    npad = padded_n(algo.n, bs)
+
+    def padv(a, fillv):
+        out = np.full((npad,), fillv, dtype=np.float32)
+        out[: algo.n] = a
+        return np.repeat(out[:, None], d, axis=1)
+
+    fixed = np.zeros(npad, np.float32)
+    fixed[: algo.n] = algo.fixed.astype(np.float32)
+    fixed[algo.n:] = 1.0  # pads pinned
+    x0pad = padv(algo.x0, algo.semiring.identity)
+    return {
+        "cols": jnp.asarray(bsr.cols),
+        "tiles": jnp.asarray(bsr.tiles),
+        "c": jnp.asarray(padv(algo.c, 0.0)),
+        "x0": jnp.asarray(x0pad),
+        "fixed": jnp.asarray(np.repeat(fixed[:, None], d, axis=1)),
+        "x": jnp.asarray(x0pad.copy()),
+        "semiring": semiring,
+        "combine": algo.combine,
+        "bsr_stats": bsr.stats(),
+        "npad": npad,
+    }
+
+
+def run_async_block_pallas(
+    algo: AlgoInstance, bs: int = 128, max_iters: int = 500, interpret=None,
+    x_init: np.ndarray | None = None,
+) -> RunResult:
+    """Async engine with the fused gs_sweep kernel doing each sweep.
+
+    The convergence loop stays at the JAX level (python loop; each sweep is
+    one device call) — interpret mode is slow, so benchmarks use modest
+    sizes; on TPU each sweep is a single kernel launch.
+    """
+    ops = pack_algorithm(algo, bs)
+    x = ops["x"]
+    if x_init is not None:
+        x = x.at[: algo.n, 0].set(jnp.asarray(x_init))
+    residuals, sums = [], []
+    k = 0
+    converged = False
+    for k in range(1, max_iters + 1):
+        x_new = gs_sweep(
+            ops["cols"], ops["tiles"], ops["c"], ops["x0"], ops["fixed"], x,
+            semiring=ops["semiring"], combine=ops["combine"], interpret=interpret,
+        )
+        xo = np.asarray(x_new)[: algo.n, 0]
+        xprev = np.asarray(x)[: algo.n, 0]
+        if algo.residual == "changed":
+            res = float(np.sum(xo != xprev))
+        elif algo.residual == "l1":
+            res = float(np.sum(np.abs(xo - xprev)))
+        else:
+            res = float(np.max(np.abs(xo - xprev)))
+        residuals.append(res)
+        sums.append(float(np.sum(xo[np.abs(xo) < 1e30])))
+        x = x_new
+        if res <= algo.eps:
+            converged = True
+            break
+    return RunResult(
+        x=np.asarray(x)[: algo.n, 0],
+        rounds=k,
+        converged=converged,
+        residuals=np.asarray(residuals),
+        state_sums=np.asarray(sums),
+    )

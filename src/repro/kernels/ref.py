@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.algorithms import BIG
+
+
+def ref_bsr_spmm(
+    cols: jnp.ndarray,   # int32[nb, k_max]
+    tiles: jnp.ndarray,  # f32[nb, k_max, bs, bs]
+    x: jnp.ndarray,      # f32[nb*bs, d]
+    semiring: str = "plus_times",
+) -> jnp.ndarray:
+    nb, k_max, bs, _ = tiles.shape
+    d = x.shape[1]
+    xb = x.reshape(nb, bs, d)
+    gathered = xb[cols]  # (nb, k_max, bs, d)
+    if semiring == "plus_times":
+        return jnp.einsum("nkrc,nkcd->nrd", tiles, gathered).reshape(nb * bs, d)
+    if semiring == "min_plus":
+        # min over k and over source columns of tile[r, c] + x[c, d]
+        expanded = tiles[..., None] + gathered[:, :, None, :, :]  # (nb,k,bs_r,bs_c,d)
+        return jnp.min(jnp.min(expanded, axis=3), axis=1).reshape(nb * bs, d)
+    raise ValueError(semiring)
+
+
+def _combine(kind: str, agg, c, old, fixed, x0):
+    if kind == "replace":
+        new = c + agg
+    elif kind == "min_old":
+        new = jnp.minimum(old, jnp.minimum(c, agg))
+    elif kind == "max_old":
+        new = jnp.maximum(old, jnp.maximum(c, agg))
+    else:
+        raise ValueError(kind)
+    return jnp.where(fixed != 0, x0, new)
+
+
+def ref_gs_sweep(
+    cols: jnp.ndarray,
+    tiles: jnp.ndarray,
+    c: jnp.ndarray,
+    x0: jnp.ndarray,
+    fixed: jnp.ndarray,
+    x: jnp.ndarray,
+    semiring: str = "plus_times",
+    combine: str = "replace",
+) -> jnp.ndarray:
+    """Sequential block sweep with an evolving state vector (pure jnp)."""
+    nb, k_max, bs, _ = tiles.shape
+    d = x.shape[1]
+
+    def body(i, xcur):
+        xb = xcur.reshape(nb, bs, d)
+        gathered = xb[cols[i]]  # (k_max, bs, d)
+        if semiring == "plus_times":
+            agg = jnp.einsum("krc,kcd->rd", tiles[i], gathered)
+        else:
+            expanded = tiles[i][..., None] + gathered[:, None, :, :]
+            agg = jnp.min(jnp.min(expanded, axis=2), axis=0)
+        old = jax.lax.dynamic_slice(xcur, (i * bs, 0), (bs, d))
+        cb = jax.lax.dynamic_slice(c, (i * bs, 0), (bs, d))
+        x0b = jax.lax.dynamic_slice(x0, (i * bs, 0), (bs, d))
+        fb = jax.lax.dynamic_slice(fixed, (i * bs, 0), (bs, d))
+        new = _combine(combine, agg, cb, old, fb, x0b)
+        return jax.lax.dynamic_update_slice(xcur, new.astype(xcur.dtype), (i * bs, 0))
+
+    return jax.lax.fori_loop(0, nb, body, x)

@@ -1,0 +1,216 @@
+"""Per-cell step builders: (arch x shape x mesh) -> (fn, abstract args,
+in_shardings, donate) ready for jax.jit(...).lower(...).
+
+The SAME builders drive real execution (train loop / serve loop) and the
+dry-run — there is no separate "dry-run model", so a green compile here is
+evidence the production configuration is coherent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.shapes import SHAPES, WHISPER_ENC_FRAMES, ShapeCell
+from repro.models.model import Model, ModelConfig, build_model
+from repro.sharding.rules import (
+    ShardingRules, batch_axes_for_mesh, build_param_specs, spec_for_axes,
+)
+from repro.train import optim
+from repro.train.loop import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------- shardings
+
+def _batch_axes(mesh, global_batch: int):
+    ba = batch_axes_for_mesh(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    while ba and global_batch % size != 0:
+        ba = ba[1:] if len(ba) > 1 else ()
+        size = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    return ba
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_shapes, batch_axes):
+    """NamedShardings for a decode-cache pytree, dispatched on leaf key."""
+    ba = batch_axes if batch_axes else None
+    model_ax = "model"
+    kv_heads_ok = cfg.n_kv % mesh.shape[model_ax] == 0
+
+    def leaf_spec(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        nd = len(leaf.shape)
+        if key in ("k", "v"):
+            # (layers, B, S_c, Hkv, hd)
+            lead = [None] * (nd - 4)
+            if cfg.decode_seq_shard:
+                spec = lead + [ba, model_ax, None, None]
+            elif kv_heads_ok:
+                spec = lead + [ba, None, model_ax, None]
+            else:
+                spec = lead + [ba, None, None, None]
+        elif key in ("k_scale", "v_scale"):
+            # (layers, B, S_c, Hkv) — mirror the k/v sharding minus head_dim
+            lead = [None] * (nd - 3)
+            if cfg.decode_seq_shard:
+                spec = lead + [ba, model_ax, None]
+            elif kv_heads_ok:
+                spec = lead + [ba, None, model_ax]
+            else:
+                spec = lead + [ba, None, None]
+        elif key == "slot_pos":
+            lead = [None] * (nd - 2)
+            spec = lead + [ba, model_ax if cfg.decode_seq_shard else None]
+        elif key == "C":  # mlstm matrix memory (layers, B, H, hd, hd)
+            lead = [None] * (nd - 4)
+            spec = lead + [ba, None, None, None]
+        else:  # small recurrent states: shard batch only
+            spec = [None] * nd
+            if nd >= 2:
+                spec[1] = ba
+            elif nd == 1:
+                spec[0] = None
+        # divisibility guard
+        out = []
+        for i, e in enumerate(spec):
+            if e is None:
+                out.append(None)
+                continue
+            axes = (e,) if isinstance(e, str) else tuple(e)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(e if leaf.shape[i] % size == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+# ------------------------------------------------------------------- inputs
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.arch_type == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s - cfg.prefix_len), i32),
+            "labels": jax.ShapeDtypeStruct((b, s - cfg.prefix_len), i32),
+        }
+        if cfg.prefix_len:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.float32
+            )
+        return out
+    if shape.kind == "prefill":
+        if cfg.arch_type == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (b, min(s, WHISPER_ENC_FRAMES), cfg.d_model), jnp.float32
+                ),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        out = {"tokens": jax.ShapeDtypeStruct((b, s - cfg.prefix_len), i32)}
+        if cfg.prefix_len:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.float32
+            )
+        return out
+    if shape.kind == "decode":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+        if cfg.arch_type == "encdec":
+            out["enc_out"] = jax.ShapeDtypeStruct(
+                (b, WHISPER_ENC_FRAMES, cfg.d_model), cfg.jnp_dtype
+            )
+        return out
+    raise ValueError(shape.kind)
+
+
+# -------------------------------------------------------------------- cells
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeCell
+    fn: object                  # callable to jit+lower
+    args: tuple                 # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    donate: tuple = ()
+    notes: list = dataclasses.field(default_factory=list)
+
+
+def build_cell(
+    cfg: ModelConfig, shape_name: str, mesh, rules: ShardingRules,
+    tcfg: Optional[TrainConfig] = None,
+) -> Cell:
+    shape = SHAPES[shape_name]
+    ba = _batch_axes(mesh, shape.global_batch)
+    cfg = dataclasses.replace(
+        cfg, decode_batch_axes=(ba if ba else None) if len(ba) != 1 else ba[0]
+    )
+    model = build_model(cfg)
+    shapes_p, logical = model.param_specs()
+    param_sh = build_param_specs(mesh, rules, shapes_p, logical)
+    bspec = P(ba if len(ba) > 1 else (ba[0] if ba else None))
+    data_sh = NamedSharding(mesh, bspec)
+    notes = list(rules.fallbacks)
+    ins = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        step_fn, sh = make_train_step(model, mesh, rules, tcfg)
+        opt_shapes = jax.eval_shape(optim.init_opt_state, shapes_p)
+        args = (shapes_p, opt_shapes, ins)
+        return Cell(cfg.name, shape, step_fn, args, (), donate=(), notes=notes)
+
+    if shape.kind == "prefill":
+        if cfg.arch_type == "encdec":
+            def fn(params, batch):
+                return model.prefill(params, batch["frames"], batch["tokens"], shape.seq)
+        else:
+            def fn(params, batch):
+                return model.prefill(
+                    params, batch["tokens"], shape.seq,
+                    prefix_embeds=batch.get("prefix_embeds"), mesh=mesh,
+                )
+        in_sh = (param_sh, {k: data_sh for k in ins})
+        jfn = jax.jit(fn, in_shardings=in_sh)
+        return Cell(cfg.name, shape, jfn, (shapes_p, ins), in_sh, notes=notes)
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq)
+    )
+    cache_sh = cache_shardings(cfg, mesh, cache_shapes, ba if ba else None)
+    tok_sh = data_sh
+    pos_sh = data_sh
+    if cfg.arch_type == "encdec":
+        def fn(params, caches, batch):
+            return model.decode_step(
+                params, caches, batch["enc_out"], batch["tokens"], batch["pos"]
+            )
+    else:
+        def fn(params, caches, batch):
+            return model.decode_step(
+                params, caches, batch["tokens"], batch["pos"], mesh=mesh
+            )
+    batch_sh = {k: data_sh for k in ins}
+    in_sh = (param_sh, cache_sh, batch_sh)
+    jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+    return Cell(cfg.name, shape, jfn, (shapes_p, cache_shapes, ins), in_sh,
+                donate=(1,), notes=notes)

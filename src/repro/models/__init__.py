@@ -1,0 +1,3 @@
+from repro.models.model import ModelConfig, build_model
+
+__all__ = ["ModelConfig", "build_model"]

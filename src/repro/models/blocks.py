@@ -1,0 +1,287 @@
+"""Layer-kind blocks: pre-norm residual compositions of the sub-layers.
+
+A model's depth structure is a *pattern* — a tuple of layer kinds cycled over
+``n_layers`` (e.g. gemma3's ``("local+mlp",)*5 + ("attn+mlp",)``). Each kind
+knows how to init, apply over a full sequence (train/prefill, filling a
+cache), and apply a single decode step against its cache.
+
+Block kinds:
+  attn+mlp    global causal attention + dense MLP
+  local+mlp   sliding-window attention + dense MLP
+  enc+mlp     bidirectional attention + dense MLP (encoder layers)
+  attn+moe    global causal attention + routed MoE
+  rglru+mlp   RG-LRU recurrence + dense MLP (RecurrentGemma)
+  mlstm       xLSTM matrix-memory block (self-contained projections)
+  slstm       xLSTM scalar-memory block
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.layers import MLPConfig, apply_mlp, apply_norm, init_mlp, init_norm
+
+
+def _attn_cfg(cfg, window=None) -> A.AttnConfig:
+    return A.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=window, causal=True, kv_chunk=cfg.kv_chunk,
+    )
+
+
+def _mlp_cfg(cfg) -> MLPConfig:
+    return MLPConfig(cfg.mlp_kind, cfg.d_model, cfg.d_ff)
+
+
+def _rglru_cfg(cfg) -> R.RGLRUConfig:
+    return R.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_model)
+
+
+def _mlstm_cfg(cfg) -> R.MLSTMConfig:
+    return R.MLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads, chunk=cfg.rnn_chunk)
+
+
+def _slstm_cfg(cfg) -> R.SLSTMConfig:
+    return R.SLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                         time_chunk=cfg.slstm_tchunk)
+
+
+def _moe_cfg(cfg) -> M.MoEConfig:
+    return M.MoEConfig(
+        d_model=cfg.d_model, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+        d_expert=cfg.moe_d_expert, n_shared=cfg.moe_shared,
+        pad_experts_to=cfg.moe_pad_to, mlp_kind=cfg.mlp_kind,
+        capacity_factor=cfg.moe_capacity,
+    )
+
+
+# ---------------------------------------------------------------------- init
+
+def block_init(kind: str, key, cfg, dtype):
+    keys = jax.random.split(key, 4)
+    params, specs = {}, {}
+    params["norm1"], specs["norm1"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+    if kind in ("attn+mlp", "local+mlp", "enc+mlp", "attn+moe"):
+        window = cfg.window if kind == "local+mlp" else None
+        params["attn"], specs["attn"] = A.init_attention(keys[0], _attn_cfg(cfg, window), dtype)
+        params["norm2"], specs["norm2"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+        if kind == "attn+moe":
+            params["moe"], specs["moe"] = M.init_moe(keys[1], _moe_cfg(cfg), dtype)
+        else:
+            params["mlp"], specs["mlp"] = init_mlp(keys[1], _mlp_cfg(cfg), dtype)
+    elif kind == "rglru+mlp":
+        params["rglru"], specs["rglru"] = R.init_rglru(keys[0], _rglru_cfg(cfg), dtype)
+        params["norm2"], specs["norm2"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+        params["mlp"], specs["mlp"] = init_mlp(keys[1], _mlp_cfg(cfg), dtype)
+    elif kind == "mlstm":
+        params["mlstm"], specs["mlstm"] = R.init_mlstm(keys[0], _mlstm_cfg(cfg), dtype)
+    elif kind == "slstm":
+        params["slstm"], specs["slstm"] = R.init_slstm(keys[0], _slstm_cfg(cfg), dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return params, specs
+
+
+# --------------------------------------------------------------------- cache
+
+def _quantize_kv(t):
+    """Per-(token, head) symmetric int8: t (..., hd) -> (int8, f32 scale)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def block_cache(kind: str, cfg, batch: int, max_seq: int, dtype):
+    """Allocate an empty decode cache for one layer of this kind."""
+    if kind in ("attn+mlp", "attn+moe", "enc+mlp"):
+        s_c = max_seq
+    elif kind == "local+mlp":
+        s_c = min(max_seq, cfg.window)
+    elif kind == "rglru+mlp":
+        return R.rglru_state(_rglru_cfg(cfg), batch, dtype)
+    elif kind == "mlstm":
+        return R.mlstm_state(_mlstm_cfg(cfg), batch)
+    elif kind == "slstm":
+        return R.slstm_state(_slstm_cfg(cfg), batch)
+    else:
+        raise ValueError(kind)
+    cache = {
+        "slot_pos": jnp.full((batch, s_c), -1, jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["k"] = jnp.zeros((batch, s_c, cfg.n_kv, cfg.head_dim), jnp.int8)
+        cache["v"] = jnp.zeros((batch, s_c, cfg.n_kv, cfg.head_dim), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, s_c, cfg.n_kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, s_c, cfg.n_kv), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, s_c, cfg.n_kv, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((batch, s_c, cfg.n_kv, cfg.head_dim), dtype)
+    return cache
+
+
+def _cache_kv_views(cfg, cache):
+    """Dequantized (k, v) views of a cache (no-op for non-quantized)."""
+    if "k_scale" in cache:
+        dt = cfg.jnp_dtype
+        return (_dequantize_kv(cache["k"], cache["k_scale"], dt),
+                _dequantize_kv(cache["v"], cache["v_scale"], dt))
+    return cache["k"], cache["v"]
+
+
+def _fill_kv_cache(cache, k, v, positions):
+    """Write a full-sequence prefill into a (possibly rolling) cache."""
+    quant = "k_scale" in cache
+    if quant:
+        k, k_s = _quantize_kv(k)
+        v, v_s = _quantize_kv(v)
+    b, s = k.shape[:2]
+    s_c = cache["k"].shape[1]
+    out = {}
+    if s >= s_c:
+        # keep the last s_c entries, placed at slot = pos % s_c
+        pos_tail = positions[-s_c:]
+        slots = (pos_tail % s_c).astype(jnp.int32)
+        out["k"] = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, -s_c:])
+        out["v"] = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, -s_c:])
+        out["slot_pos"] = jnp.full_like(cache["slot_pos"], -1).at[:, slots].set(
+            pos_tail[None, :].astype(jnp.int32)
+        )
+        if quant:
+            out["k_scale"] = jnp.zeros_like(cache["k_scale"]).at[:, slots].set(k_s[:, -s_c:])
+            out["v_scale"] = jnp.zeros_like(cache["v_scale"]).at[:, slots].set(v_s[:, -s_c:])
+    else:
+        slots = (positions % s_c).astype(jnp.int32)
+        out["k"] = cache["k"].at[:, slots].set(k)
+        out["v"] = cache["v"].at[:, slots].set(v)
+        out["slot_pos"] = cache["slot_pos"].at[:, slots].set(
+            positions[None, :].astype(jnp.int32))
+        if quant:
+            out["k_scale"] = cache["k_scale"].at[:, slots].set(k_s)
+            out["v_scale"] = cache["v_scale"].at[:, slots].set(v_s)
+    return out
+
+
+def _append_kv_cache(cache, k1, v1, pos):
+    """Decode-step write. k1/v1: (B,1,Hkv,hd); pos: (B,) absolute position."""
+    quant = "k_scale" in cache
+    if quant:
+        k1, k_s = _quantize_kv(k1)
+        v1, v_s = _quantize_kv(v1)
+    s_c = cache["k"].shape[1]
+    b = k1.shape[0]
+    slot = (pos % s_c).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    out = {
+        "k": cache["k"].at[bidx, slot].set(k1[:, 0]),
+        "v": cache["v"].at[bidx, slot].set(v1[:, 0]),
+        "slot_pos": cache["slot_pos"].at[bidx, slot].set(pos.astype(jnp.int32)),
+    }
+    if quant:
+        out["k_scale"] = cache["k_scale"].at[bidx, slot].set(k_s[:, 0])
+        out["v_scale"] = cache["v_scale"].at[bidx, slot].set(v_s[:, 0])
+    return out
+
+
+# --------------------------------------------------------------------- apply
+
+def block_apply(
+    kind: str, cfg, params, x, positions,
+    cache: Optional[dict] = None, decode: bool = False, mesh=None,
+):
+    """Returns (y, new_cache, aux_loss).
+
+    Train: cache=None, decode=False. Prefill: cache allocated, decode=False
+    (cache is filled). Decode: cache carried, decode=True, x is (B, 1, D) and
+    positions is (B,) absolute position of the new token.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if kind in ("attn+mlp", "local+mlp", "enc+mlp", "attn+moe"):
+        window = cfg.window if kind == "local+mlp" else None
+        acfg = _attn_cfg(cfg, window)
+        if kind == "enc+mlp":
+            acfg = A.AttnConfig(**{**acfg.__dict__, "causal": False})
+        h = apply_norm(cfg.norm_kind, params["norm1"], x)
+        if decode:
+            q, k1, v1 = A.project_qkv(acfg, params["attn"], h, positions[:, None])
+            if cfg.kv_cache_dtype == "int8" and cfg.decode_seq_shard and mesh is not None:
+                raise NotImplementedError(
+                    "int8 KV + sequence-sharded decode not wired together yet; "
+                    "use one or the other (tracked as future work)"
+                )
+            if cfg.decode_seq_shard and mesh is not None:
+                attn_out, kc, vc, sp = A.decode_append_attend_seqsharded(
+                    acfg, mesh, cfg.decode_seq_axis, q, k1, v1,
+                    cache["k"], cache["v"], positions, cache["slot_pos"],
+                    batch_axis=cfg.decode_batch_axes,
+                )
+                new_cache = {"k": kc, "v": vc, "slot_pos": sp}
+            else:
+                new_cache = _append_kv_cache(cache, k1, v1, positions)
+                kd, vd = _cache_kv_views(cfg, new_cache)
+                attn_out = A.decode_attention(
+                    acfg, q, kd, vd, positions, new_cache["slot_pos"],
+                )
+        else:
+            q, k, v = A.project_qkv(acfg, params["attn"], h, positions[None, :])
+            if cfg.q_chunk and x.shape[1] > cfg.q_chunk:
+                attn_out = A.attention_chunked_q(
+                    acfg, q, k, v, positions, positions, cfg.q_chunk
+                )
+            elif x.shape[1] > cfg.kv_chunk:
+                attn_out = A.attention_chunked(acfg, q, k, v, positions, positions)
+            else:
+                attn_out = A.attention_full(acfg, q, k, v, positions, positions)
+            if cache is not None:
+                new_cache = _fill_kv_cache(cache, k, v, positions)
+        from jax.ad_checkpoint import checkpoint_name
+
+        # name the post-TP-collective tensors: the "save_tp" remat policy
+        # keeps them so the recompute pass re-runs NO all-reduces
+        x = x + checkpoint_name(
+            A.output_proj(acfg, params["attn"], attn_out), "tp_attn_out"
+        )
+        h = apply_norm(cfg.norm_kind, params["norm2"], x)
+        if kind == "attn+moe":
+            y, aux = M.apply_moe(_moe_cfg(cfg), params["moe"], h)
+        else:
+            y = apply_mlp(_mlp_cfg(cfg), params["mlp"], h)
+        x = x + checkpoint_name(y, "tp_mlp_out")
+        return x, new_cache, aux
+
+    if kind == "rglru+mlp":
+        h = apply_norm(cfg.norm_kind, params["norm1"], x)
+        y, new_cache = R.apply_rglru(_rglru_cfg(cfg), params["rglru"], h, cache)
+        x = x + y
+        h = apply_norm(cfg.norm_kind, params["norm2"], x)
+        x = x + apply_mlp(_mlp_cfg(cfg), params["mlp"], h)
+        return x, new_cache, aux
+
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm_kind, params["norm1"], x)
+        mcfg = _mlstm_cfg(cfg)
+        if decode or x.shape[1] < mcfg.chunk:
+            import dataclasses as _dc
+            mcfg = _dc.replace(mcfg, chunk=x.shape[1])
+        y, new_cache = R.apply_mlstm(mcfg, params["mlstm"], h, cache)
+        return x + y, new_cache, aux
+
+    if kind == "slstm":
+        h = apply_norm(cfg.norm_kind, params["norm1"], x)
+        y, new_cache = R.apply_slstm(_slstm_cfg(cfg), params["slstm"], h, cache)
+        return x + y, new_cache, aux
+
+    raise ValueError(kind)

@@ -1,0 +1,194 @@
+"""Whisper-style encoder–decoder backbone.
+
+Per the assignment, the audio frontend (log-mel + strided convs) is a STUB:
+``input_specs()`` supplies precomputed frame embeddings (B, T, d_model); a
+single linear ``frontend_proj`` stands in for the conv stack (documented in
+DESIGN.md §4). Encoder layers are bidirectional; decoder layers are
+causal self-attention + cross-attention over the encoder output + MLP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models.layers import (
+    MLPConfig, apply_mlp, apply_norm, init_embedding, init_linear, init_mlp, init_norm,
+)
+from repro.models.transformer import embed_tokens, logits_from
+
+
+def _self_cfg(cfg, causal):
+    return A.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=None, causal=causal, kv_chunk=cfg.kv_chunk,
+    )
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params, specs = {}, {}
+    params["norm1"], specs["norm1"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+    params["self"], specs["self"] = A.init_attention(k1, _self_cfg(cfg, True), dtype)
+    params["norm_x"], specs["norm_x"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+    params["cross"], specs["cross"] = A.init_attention(k2, _self_cfg(cfg, False), dtype)
+    params["norm2"], specs["norm2"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+    params["mlp"], specs["mlp"] = init_mlp(k3, MLPConfig(cfg.mlp_kind, cfg.d_model, cfg.d_ff), dtype)
+    return params, specs
+
+
+def init_params(cfg, key):
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, 6)
+    params, specs = {}, {}
+    params["emb"], specs["emb"] = init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype)
+    params["frontend_proj"], specs["frontend_proj"] = init_linear(
+        keys[1], cfg.d_model, (cfg.d_model,), ("embed", "embed_out"), dtype
+    )
+    params["final_norm"], specs["final_norm"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+
+    enc_keys = jax.random.split(keys[2], cfg.enc_layers)
+    _, enc_spec1 = B.block_init("enc+mlp", enc_keys[0], cfg, dtype)
+    params["enc"] = jax.vmap(lambda k: B.block_init("enc+mlp", k, cfg, dtype)[0])(enc_keys)
+    specs["enc"] = jax.tree.map(lambda ax: (None,) + tuple(ax), enc_spec1,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+    dec_keys = jax.random.split(keys[3], cfg.dec_layers)
+    _, dec_spec1 = _dec_layer_init(dec_keys[0], cfg, dtype)
+    params["dec"] = jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype)[0])(dec_keys)
+    specs["dec"] = jax.tree.map(lambda ax: (None,) + tuple(ax), dec_spec1,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+def _maybe_remat(cfg, fn):
+    from repro.models.transformer import _maybe_remat as _mr
+
+    return _mr(cfg, fn)
+
+
+def encode(cfg, params, frames):
+    """frames: (B, T, d_model) stub embeddings -> encoder states."""
+    x = jnp.einsum("btd,de->bte", frames.astype(cfg.jnp_dtype), params["frontend_proj"])
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, p):
+        x, = carry
+        x, _, _ = B.block_apply("enc+mlp", cfg, p, x, positions)
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(_maybe_remat(cfg, body), (x,), params["enc"])
+    return x
+
+
+def _dec_layer(cfg, p, x, enc_kv, positions, cache=None, decode=False):
+    scfg = _self_cfg(cfg, True)
+    xcfg = _self_cfg(cfg, False)
+    h = apply_norm(cfg.norm_kind, p["norm1"], x)
+    if decode:
+        q, k1, v1 = A.project_qkv(scfg, p["self"], h, positions[:, None])
+        cache = B._append_kv_cache(cache, k1, v1, positions)
+        kd, vd = B._cache_kv_views(cfg, cache)
+        attn = A.decode_attention(scfg, q, kd, vd, positions, cache["slot_pos"])
+    else:
+        q, k, v = A.project_qkv(scfg, p["self"], h, positions[None, :])
+        if x.shape[1] > cfg.kv_chunk:
+            attn = A.attention_chunked(scfg, q, k, v, positions, positions)
+        else:
+            attn = A.attention_full(scfg, q, k, v, positions, positions)
+        if cache is not None:
+            cache = B._fill_kv_cache(cache, k, v, positions)
+    x = x + A.output_proj(scfg, p["self"], attn)
+
+    # cross attention over (precomputed) encoder keys/values — chunked
+    # online-softmax when the decoder side is long (train_4k: sq=4096)
+    h = apply_norm(cfg.norm_kind, p["norm_x"], x)
+    qx = jnp.einsum("bsd,dhe->bshe", h, p["cross"]["wq"])
+    ek, ev = enc_kv
+    sq = h.shape[1]
+    enc_pos = jnp.arange(ek.shape[1])
+    q_pos = positions if (decode and positions.ndim == 1) else jnp.arange(sq)
+    if sq * ek.shape[1] > cfg.kv_chunk * cfg.kv_chunk:
+        xout = A.attention_chunked(xcfg, qx, ek, ev, q_pos, enc_pos)
+    else:
+        xout = A.attention_full(xcfg, qx, ek, ev, q_pos, enc_pos)
+    x = x + A.output_proj(xcfg, p["cross"], xout)
+
+    h = apply_norm(cfg.norm_kind, p["norm2"], x)
+    x = x + apply_mlp(MLPConfig(cfg.mlp_kind, cfg.d_model, cfg.d_ff), p["mlp"], h)
+    return x, cache
+
+
+def _enc_kv(cfg, params, enc_out):
+    """Precompute per-decoder-layer cross K/V (stacked over layers)."""
+    xcfg = _self_cfg(cfg, False)
+
+    def one(p):
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wv"])
+        return k, v
+
+    return jax.vmap(one)(params["dec"])  # (L, B, T, Hkv, hd) pair
+
+
+def decoder_forward(cfg, params, tokens, enc_out, caches=None, decode=False, pos=None):
+    x = embed_tokens(cfg, params, tokens)
+    positions = pos if decode else jnp.arange(x.shape[1])
+    ek, ev = _enc_kv(cfg, params, enc_out)
+
+    have_cache = caches is not None
+
+    def body(carry, xs):
+        x, = carry
+        if have_cache:
+            p, ekl, evl, c = xs
+        else:
+            p, ekl, evl = xs
+            c = None
+        x, nc = _dec_layer(cfg, p, x, (ekl, evl), positions, cache=c, decode=decode)
+        return (x,), (nc if have_cache else 0)
+
+    xs = (params["dec"], ek, ev) + ((caches,) if have_cache else ())
+    scan_body = body if (decode or have_cache) else _maybe_remat(cfg, body)
+    (x,), ys = jax.lax.scan(scan_body, (x,), xs)
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    return logits_from(cfg, params, x), (ys if have_cache else None)
+
+
+def loss_fn(cfg, params, batch, mesh=None):
+    """batch: frames (B,T,D), tokens (B,S), labels (B,S)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    logits, _ = decoder_forward(cfg, params, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+def init_dec_caches(cfg, batch: int, max_seq: int):
+    one = {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv, cfg.head_dim), cfg.jnp_dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv, cfg.head_dim), cfg.jnp_dtype),
+        "slot_pos": jnp.full((batch, max_seq), -1, jnp.int32),
+    }
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape), one)
+
+
+def prefill(cfg, params, frames, tokens, max_seq: int):
+    enc_out = encode(cfg, params, frames)
+    caches = init_dec_caches(cfg, tokens.shape[0], max_seq)
+    logits, caches = decoder_forward(cfg, params, tokens, enc_out, caches=caches)
+    return logits[:, -1:], caches, enc_out
+
+
+def decode_step(cfg, params, caches, enc_out, tokens1, pos):
+    logits, caches = decoder_forward(
+        cfg, params, tokens1, enc_out, caches=caches, decode=True, pos=pos
+    )
+    return logits, caches

@@ -1,0 +1,121 @@
+"""Shared neural layers: norms, rotary embeddings, MLP variants, initializers.
+
+Every ``init_*`` returns ``(params, specs)`` — a parameter pytree and a
+matching pytree of *logical axis tuples* (strings or None per dim). The
+sharding layer (repro/sharding/rules.py) maps logical axes onto mesh axes, so
+models never mention mesh axes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------- init
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out_shape: tuple, axes: tuple, dtype, scale=None):
+    """Weight of shape (d_in, *d_out_shape); fan-in scaled init."""
+    shape = (d_in,) + tuple(d_out_shape)
+    scale = scale if scale is not None else d_in ** -0.5
+    return _normal(key, shape, scale, dtype), axes
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    # std d^-0.5: with the sqrt(d) input scaling this gives unit-RMS token
+    # embeddings AND unit-variance tied logits
+    return _normal(key, (vocab, d), d ** -0.5, dtype), ("vocab", "embed")
+
+
+# ---------------------------------------------------------------------- norm
+
+def init_norm(kind: str, d: int, dtype):
+    """kind: rms | layernorm | nonparam  (olmo-style non-parametric LN)."""
+    if kind == "rms":
+        # gemma convention: stored as zero-centered, applied as (1 + scale)
+        return {"scale": jnp.zeros((d,), dtype)}, {"scale": ("embed",)}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    if kind == "nonparam":
+        return {}, {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    kind: str        # swiglu | geglu | gelu
+    d_model: int
+    d_ff: int
+
+
+def init_mlp(key, cfg: MLPConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.kind in ("swiglu", "geglu")
+    params = {}
+    specs = {}
+    params["wi"], specs["wi"] = init_linear(k1, cfg.d_model, (cfg.d_ff,), ("embed", "ffn"), dtype)
+    if gated:
+        params["wg"], specs["wg"] = init_linear(k2, cfg.d_model, (cfg.d_ff,), ("embed", "ffn"), dtype)
+    params["wo"], specs["wo"] = init_linear(k3, cfg.d_ff, (cfg.d_model,), ("ffn", "embed"), dtype)
+    return params, specs
+
+
+def apply_mlp(cfg: MLPConfig, params, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if cfg.kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["wg"])) * h
+    elif cfg.kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wg"])) * h
+    elif cfg.kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.kind)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ------------------------------------------------------------------- utility
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

@@ -1,0 +1,184 @@
+"""ModelConfig + the build_model() entry point used by configs/, launch/,
+tests and benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    arch_type: str = "decoder"              # decoder | encdec
+    pattern: tuple = ("attn+mlp",)
+    mlp_kind: str = "swiglu"
+    norm_kind: str = "rms"
+    rope_theta: float = 10000.0
+    window: int = 1024                      # sliding-window size for "local+*"
+    kv_chunk: int = 1024                    # online-softmax chunk
+    q_chunk: int = 2048                     # doubly-chunked attention with
+                                            # static causal/window chunk skip
+                                            # (0 disables; see §Perf)
+    rnn_chunk: int = 256                    # mLSTM chunk
+    slstm_tchunk: int = 16                  # sLSTM steps per scan iteration
+    dtype: str = "bfloat16"
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_expert: int = 0
+    moe_shared: int = 0
+    moe_pad_to: Optional[int] = None
+    moe_capacity: float = 1.25
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # vision prefix (vlm)
+    prefix_len: int = 0
+    # sub-quadratic eligibility (long_500k cells)
+    subquadratic: bool = False
+    # distributed decode
+    decode_seq_shard: bool = False
+    decode_seq_axis: str = "model"
+    decode_batch_axes: Optional[str] = "data"
+    # KV-cache quantization: "model" (= model dtype) | "int8" (per-token,
+    # per-head symmetric scales; halves at-rest cache bytes — the capacity
+    # lever for fat-KV decode cells, see EXPERIMENTS §Dry-run)
+    kv_cache_dtype: str = "model"
+    # training
+    remat: str = "full"                     # none | dots | full
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding counted once: tied)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab * d
+        counts = {
+            "attn": d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d,
+            "mlp": d * self.d_ff * (3 if self.mlp_kind in ("swiglu", "geglu") else 2),
+            "moe": (self.moe_pad_to or self.moe_experts) * 3 * d * self.moe_d_expert
+                   + d * (self.moe_pad_to or self.moe_experts)
+                   + (3 * d * self.moe_shared * self.moe_d_expert if self.moe_shared else 0),
+            "rglru": 3 * d * d + 2 * d * d,      # wx, wy, wo + gates
+            "mlstm": 2 * d * int(2.0 * d) + 3 * (2 * d) ** 2 + 2 * d * d,
+            "slstm": d * int(4 * d / 3) * (1 + 4 + 4) + int(4 * d / 3) * d,
+        }
+        if self.arch_type == "encdec":
+            per = counts["attn"] + counts["mlp"]
+            return total + self.enc_layers * per + self.dec_layers * (2 * counts["attn"] + counts["mlp"])
+        for i in range(self.n_layers):
+            kind = self.pattern[i % len(self.pattern)]
+            if kind in ("attn+mlp", "local+mlp", "enc+mlp"):
+                total += counts["attn"] + counts["mlp"]
+            elif kind == "attn+moe":
+                total += counts["attn"] + counts["moe"]
+            elif kind == "rglru+mlp":
+                total += counts["rglru"] + counts["mlp"]
+            elif kind == "mlstm":
+                total += counts["mlstm"]
+            elif kind == "slstm":
+                total += counts["slstm"]
+        return total
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameters — differs for MoE."""
+        if not self.moe_experts:
+            return self.n_params()
+        full = self.n_params()
+        e = self.moe_pad_to or self.moe_experts
+        moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if self.pattern[i % len(self.pattern)] == "attn+moe"
+        )
+        routed_all = moe_layers * e * 3 * self.d_model * self.moe_d_expert
+        routed_active = moe_layers * self.moe_top_k * 3 * self.d_model * self.moe_d_expert
+        return full - routed_all + routed_active
+
+
+class Model:
+    """Thin dispatcher over the decoder / encdec implementations."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._mod = E if cfg.arch_type == "encdec" else T
+
+    def init(self, key):
+        params, specs = self._mod.init_params(self.cfg, key)
+        self.param_logical_specs = specs
+        return params
+
+    def param_specs(self):
+        """(ShapeDtypeStruct pytree, logical-axes pytree) — no allocation."""
+        return _trace_specs(self._mod, self.cfg)
+
+    def loss_fn(self, params, batch, mesh=None):
+        return self._mod.loss_fn(self.cfg, params, batch, mesh=mesh)
+
+    # decoder-only conveniences
+    def forward(self, params, tokens, **kw):
+        return T.forward(self.cfg, params, tokens, **kw)
+
+    def prefill(self, params, *args, **kw):
+        return self._mod.prefill(self.cfg, params, *args, **kw)
+
+    def decode_step(self, params, *args, **kw):
+        return self._mod.decode_step(self.cfg, params, *args, **kw)
+
+    def init_caches(self, batch, max_seq):
+        if self.cfg.arch_type == "encdec":
+            return E.init_dec_caches(self.cfg, batch, max_seq)
+        return T.init_caches(self.cfg, batch, max_seq)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def _trace_specs(mod, cfg):
+    key = (mod.__name__, cfg.name, cfg.n_layers, cfg.d_model)
+    if key not in _SPEC_CACHE:
+        # init on the abstract level only: eval_shape avoids allocation, but
+        # specs are plain python produced alongside; run init under eval_shape
+        # and capture specs via closure.
+        holder = {}
+
+        def _init(k):
+            p, s = mod.init_params(cfg, k)
+            holder["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(_init, jax.random.PRNGKey(0))
+        _SPEC_CACHE[key] = (shapes, holder["specs"])
+    return _SPEC_CACHE[key]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct pytree, logical-axes pytree) without allocating."""
+    mod = E if cfg.arch_type == "encdec" else T
+    return _trace_specs(mod, cfg)

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: GShard-style top-k routing with capacity,
+shared experts (Qwen-MoE style), expert padding for clean expert-parallelism,
+and the standard load-balancing auxiliary loss.
+
+Dispatch is the einsum (dense one-hot) formulation: under pjit the expert
+dimension is sharded over the "model"/"expert" mesh axis, so the dispatch and
+return einsums lower to the canonical all-to-all pair. Capacity keeps the
+per-expert buffers static-shaped (dropped tokens fall back to the residual
+stream, plus the always-on shared experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MLPConfig, init_mlp, apply_mlp, init_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int          # routed experts (real)
+    top_k: int
+    d_expert: int           # per-expert FFN width
+    n_shared: int = 0       # always-on shared experts (fused into one MLP)
+    capacity_factor: float = 1.25
+    pad_experts_to: int | None = None   # pad E for divisibility (EP sharding)
+    mlp_kind: str = "swiglu"
+    aux_weight: float = 0.01
+    group_tokens: int = 1024  # dispatch group length: bounds the (g,s,e,c)
+                              # one-hot tensors at s*e*cap ~ O(group^2*k/cf)
+
+    @property
+    def e_padded(self) -> int:
+        return self.pad_experts_to or self.n_experts
+
+
+def init_moe(key, cfg: MoEConfig, dtype):
+    kg, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    e = cfg.e_padded
+    params, specs = {}, {}
+    params["wg"], specs["wg"] = init_linear(kg, cfg.d_model, (e,), ("embed", None), dtype)
+    scale = cfg.d_model ** -0.5
+    params["wi"] = (jax.random.normal(ke1, (e, cfg.d_model, cfg.d_expert), jnp.float32) * scale).astype(dtype)
+    params["wg_up"] = (jax.random.normal(ke2, (e, cfg.d_model, cfg.d_expert), jnp.float32) * scale).astype(dtype)
+    params["wo"] = (jax.random.normal(ke3, (e, cfg.d_expert, cfg.d_model), jnp.float32) * cfg.d_expert ** -0.5).astype(dtype)
+    specs["wi"] = ("expert", "embed", "ffn")
+    specs["wg_up"] = ("expert", "embed", "ffn")
+    specs["wo"] = ("expert", "ffn", "embed")
+    if cfg.n_shared:
+        shared_cfg = MLPConfig(cfg.mlp_kind, cfg.d_model, cfg.n_shared * cfg.d_expert)
+        params["shared"], specs["shared"] = init_mlp(ks, shared_cfg, dtype)
+        params["shared_gate"], specs["shared_gate"] = init_linear(
+            ks, cfg.d_model, (1,), ("embed", None), dtype
+        )
+    return params, specs
+
+
+def apply_moe(cfg: MoEConfig, params, x):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are dispatched in groups of ~group_tokens (sequences are split,
+    GShard-style): the (s, e, capacity) one-hot dispatch/combine tensors then
+    stay O(group * e * group*k/e) per group instead of O(S^2 * k) for long
+    sequences.
+    """
+    b_orig, s_orig, d = x.shape
+    split = max(1, s_orig // cfg.group_tokens)
+    while s_orig % split:
+        split -= 1
+    x = x.reshape(b_orig * split, s_orig // split, d)
+    b, s, _ = x.shape
+    e = cfg.e_padded
+    capacity = max(1, int(s * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    logits = jnp.einsum("bsd,de->bse", x, params["wg"]).astype(jnp.float32)
+    if e > cfg.n_experts:  # mask padded experts out of routing
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)        # (b, s, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )  # renormalize over selected experts (qwen/mixtral convention)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)      # (b, s, k, e)
+    flat = onehot.reshape(b, s * cfg.top_k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, cfg.top_k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)               # (b, s, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch/combine tensors (b, s, e, c) — kept in the compute dtype
+    # (bf16): dispatch entries are {0,1}, combine entries are gate values
+    pos_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_onehot).astype(x.dtype)
+    combine = jnp.einsum(
+        "bsk,bske,bskc->bsec", gate_vals, onehot, pos_onehot
+    ).astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)  # (b,e,c,d)
+    h = jnp.einsum("becd,edf->becf", xe, params["wi"])
+    hg = jnp.einsum("becd,edf->becf", xe, params["wg_up"])
+    h = jax.nn.silu(hg) * h if cfg.mlp_kind == "swiglu" else jax.nn.gelu(hg) * h
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"])
+    y = jnp.einsum("bsec,becd->bsd", combine, ye)
+
+    if cfg.n_shared:
+        shared_cfg = MLPConfig(cfg.mlp_kind, cfg.d_model, cfg.n_shared * cfg.d_expert)
+        gate = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x, params["shared_gate"]).astype(jnp.float32)
+        ).astype(x.dtype)
+        y = y + gate * apply_mlp(shared_cfg, params["shared"], x)
+
+    # Switch-style load-balance aux loss over the *real* experts
+    me = jnp.mean(onehot.sum(axis=2), axis=(0, 1))[: cfg.n_experts]   # fraction routed
+    pe = jnp.mean(probs, axis=(0, 1))[: cfg.n_experts]                # mean prob
+    aux = cfg.n_experts * jnp.sum(me * pe) * cfg.aux_weight
+    return y.reshape(b_orig, s_orig, d), aux

@@ -1,0 +1,380 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and xLSTM cells.
+
+* RG-LRU runs as a `jax.lax.associative_scan` over (decay, input) pairs —
+  O(log S) depth, the TPU-native form of a linear recurrence.
+* mLSTM (matrix-memory) uses the chunkwise-parallel form: intra-chunk
+  attention-like compute on the MXU + an inter-chunk scan over the (C, n)
+  running state, the standard sub-quadratic realization.
+* sLSTM has hidden-to-hidden recurrence and is genuinely sequential (xLSTM
+  paper §2.3); it runs as a per-step `lax.scan` with a small state.
+
+All blocks expose (train/prefill) `apply` over full sequences and a
+single-step `step` for decode, carrying explicit state pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+
+
+# =====================================================================
+# RG-LRU (Griffin)
+# =====================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int           # recurrence width (Griffin: ~4/3 d_model; we use d_model)
+    conv_width: int = 4
+    c_const: float = 8.0
+
+
+def init_rglru(key, cfg: RGLRUConfig, dtype):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    params, specs = {}, {}
+    params["wx"], specs["wx"] = init_linear(k1, cfg.d_model, (cfg.d_rnn,), ("embed", "ffn"), dtype)
+    params["wy"], specs["wy"] = init_linear(k2, cfg.d_model, (cfg.d_rnn,), ("embed", "ffn"), dtype)
+    params["wo"], specs["wo"] = init_linear(k3, cfg.d_rnn, (cfg.d_model,), ("ffn", "embed"), dtype)
+    # depthwise causal conv over the rnn channel
+    params["conv"] = (jax.random.normal(k4, (cfg.conv_width, cfg.d_rnn), jnp.float32) * 0.1).astype(dtype)
+    specs["conv"] = (None, "ffn")
+    # recurrence gates: a (recurrent weight via Lambda), input gate
+    params["w_a"], specs["w_a"] = init_linear(k5, cfg.d_rnn, (cfg.d_rnn,), ("ffn", None), dtype)
+    params["w_i"], specs["w_i"] = init_linear(k6, cfg.d_rnn, (cfg.d_rnn,), ("ffn", None), dtype)
+    # Lambda parametrizes the per-channel decay in (0, 1)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, cfg.d_rnn)))  # softplus^-1
+    params["lambda"] = lam.astype(jnp.float32)
+    specs["lambda"] = ("ffn",)
+    return params, specs
+
+
+def _causal_depthwise_conv(x, w, state=None):
+    """x: (B, S, C), w: (W, C). Returns (y, new_state (B, W-1, C))."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return y, new_state
+
+
+def _rglru_scan(a, bx, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan; a, bx: (B, S, C)."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_rglru(cfg: RGLRUConfig, params, x, state=None):
+    """x: (B, S, D). Returns (y, new_state dict)."""
+    gate_y = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, params["wy"]))
+    u = jnp.einsum("bsd,dr->bsr", x, params["wx"])
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = _causal_depthwise_conv(u, params["conv"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rc->bsc", u, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rc->bsc", u, params["w_i"]).astype(jnp.float32))
+    log_a = -cfg.c_const * r * jax.nn.softplus(params["lambda"])
+    a = jnp.exp(log_a)
+    # input normalization keeps |h| bounded (Griffin eq. 4)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    bx = beta * (i * u.astype(jnp.float32))
+
+    h0 = None if state is None else state["h"]
+    h = _rglru_scan(a, bx, h0)
+    y = (h.astype(x.dtype) * gate_y)
+    y = jnp.einsum("bsr,rd->bsd", y, params["wo"])
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    return y, new_state
+
+
+def rglru_state(cfg: RGLRUConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+# =====================================================================
+# mLSTM (xLSTM matrix memory) — chunkwise-parallel
+# =====================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, cfg: MLSTMConfig, dtype):
+    ks = jax.random.split(key, 8)
+    di = cfg.d_inner
+    params, specs = {}, {}
+    params["w_up"], specs["w_up"] = init_linear(ks[0], cfg.d_model, (di,), ("embed", "ffn"), dtype)
+    params["w_gate"], specs["w_gate"] = init_linear(ks[1], cfg.d_model, (di,), ("embed", "ffn"), dtype)
+    params["wq"], specs["wq"] = init_linear(ks[2], di, (di,), ("ffn", None), dtype)
+    params["wk"], specs["wk"] = init_linear(ks[3], di, (di,), ("ffn", None), dtype)
+    params["wv"], specs["wv"] = init_linear(ks[4], di, (di,), ("ffn", None), dtype)
+    params["w_if"], specs["w_if"] = init_linear(ks[5], di, (2 * cfg.n_heads,), ("ffn", None), dtype)
+    params["w_down"], specs["w_down"] = init_linear(ks[6], di, (cfg.d_model,), ("ffn", "embed"), dtype)
+    return params, specs
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, state=None):
+    """Chunkwise mLSTM. q,k,v: (B,H,S,hd); log_i/log_f: (B,H,S).
+
+    State: C (B,H,hd,hd), n (B,H,hd), m (B,H) running stabilizer.
+    Returns h (B,H,S,hd) and final state.
+    """
+    b, h, s, hd = q.shape
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    F = jnp.cumsum(log_f, axis=-1)                      # (B,H,S) cumulative decay
+
+    # intra-chunk decay matrix D[t, s'] = F_t - F_s' + log_i_s'  (s' <= t)
+    Dmask = jnp.tril(jnp.ones((s, s), bool))
+    D = F[..., :, None] - F[..., None, :] + log_i[..., None, :]
+    D = jnp.where(Dmask, D, -1e30)
+
+    # stabilizers: running max of (F_t + m_prev-ish terms)
+    m_intra = jnp.max(D, axis=-1)                       # (B,H,S)
+    m_inter = F + m0[..., None]                          # carried state weight
+    m_t = jnp.maximum(m_intra, m_inter)                  # (B,H,S)
+
+    scale = hd ** -0.5
+    att = jnp.einsum("bhtd,bhsd->bhts", q * scale, k).astype(jnp.float32)
+    att = att * jnp.exp(D - m_t[..., None])
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", att, v.astype(jnp.float32))
+    n_intra = jnp.sum(att, axis=-1)                      # (B,H,S) — k-sum proxy
+    # inter-chunk contribution from carried C0, n0
+    w_inter = jnp.exp(m_inter - m_t)                     # (B,H,S)
+    h_inter = jnp.einsum("bhtd,bhde->bhte", q.astype(jnp.float32) * scale, C0) * w_inter[..., None]
+    n_inter = jnp.einsum("bhtd,bhd->bht", q.astype(jnp.float32) * scale, n0) * w_inter
+
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_t))
+    h_out = (h_intra + h_inter) / denom[..., None]
+
+    # state update to end of chunk
+    F_end = F[..., -1:]                                  # (B,H,1)
+    m_new = jnp.maximum(F_end[..., 0] + m0, jnp.max(F_end - F + log_i, axis=-1))
+    wk = jnp.exp(F_end - F + log_i - m_new[..., None])   # (B,H,S)
+    C_new = jnp.exp(F_end[..., 0] + m0 - m_new)[..., None, None] * C0 + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", wk, k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n_new = jnp.exp(F_end[..., 0] + m0 - m_new)[..., None] * n0 + jnp.einsum(
+        "bhs,bhsd->bhd", wk, k.astype(jnp.float32)
+    )
+    return h_out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def apply_mlstm(cfg: MLSTMConfig, params, x, state=None):
+    """x: (B, S, D) -> (y, state). Sequence is processed in chunks."""
+    b, s, _ = x.shape
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"])
+    gate = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, params["w_gate"]))
+    q = jnp.einsum("bsi,ij->bsj", up, params["wq"])
+    k = jnp.einsum("bsi,ij->bsj", up, params["wk"])
+    v = jnp.einsum("bsi,ij->bsj", up, params["wv"])
+    gates = jnp.einsum("bsi,ig->bsg", up, params["w_if"]).astype(jnp.float32)
+    log_i = jax.nn.log_sigmoid(gates[..., : cfg.n_heads])       # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., cfg.n_heads :])
+
+    hd = cfg.head_dim
+
+    def heads(t):  # (B,S,di) -> (B,H,S,hd)
+        return t.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    log_i = log_i.transpose(0, 2, 1)
+    log_f = log_f.transpose(0, 2, 1)
+
+    ck = min(cfg.chunk, s)
+    pad = (-s) % ck
+    if pad:
+        # pad with identity steps: i=0 (no write), f=1 (no decay) — the final
+        # state is unaffected and padded outputs are trimmed below
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)), constant_values=0.0)
+    s_pad = s + pad
+    nc = s_pad // ck
+
+    def chunk_step(carry, inp):
+        qc, kc, vc, lic, lfc = inp
+        h, new_state = _mlstm_chunk_scan(qc, kc, vc, lic, lfc, carry)
+        return new_state, h
+
+    def to_chunks(t):  # (B,H,S,...) -> (nc, B,H,ck,...)
+        shp = t.shape
+        return t.reshape(shp[0], shp[1], nc, ck, *shp[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1)
+        )
+
+    if state is None:
+        state = mlstm_state(cfg, b)
+    final_state, hs = jax.lax.scan(
+        chunk_step, state,
+        (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(log_i), to_chunks(log_f)),
+    )
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, cfg.n_heads, s_pad, hd)[:, :, :s]
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = jnp.einsum("bsi,id->bsd", h * gate, params["w_down"])
+    return y, final_state
+
+
+def mlstm_state(cfg: MLSTMConfig, batch: int):
+    hd = cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+    }
+
+
+def step_mlstm(cfg: MLSTMConfig, params, x1, state):
+    """Decode step: x1 (B, 1, D)."""
+    y, new_state = apply_mlstm(
+        dataclasses.replace(cfg, chunk=1), params, x1, state
+    )
+    return y, new_state
+
+
+# =====================================================================
+# sLSTM (xLSTM scalar memory) — sequential scan
+# =====================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 4.0 / 3.0
+    time_chunk: int = 16
+    # time_chunk: steps executed inside ONE scan iteration (unrolled).
+    # The hidden->gates weight matrix is then fetched from HBM once per
+    # chunk instead of once per step — the recurrence itself stays exactly
+    # sequential, but weight re-streaming traffic drops by the chunk factor
+    # (the FlashRNN/Haste trick at the XLA level; see EXPERIMENTS §Perf).
+
+    @property
+    def d_inner(self) -> int:
+        # rounded UP to a multiple of lcm(n_heads, 64): hardware-aligned and
+        # evenly shardable over a 16-way model axis (a non-divisible width
+        # forces replicated recurrence weights, whose per-timestep gradient
+        # all-reduces dominated the xlstm train cell — EXPERIMENTS §Perf)
+        import math
+
+        di = int(self.d_model * self.proj_factor)
+        align = math.lcm(self.n_heads, 64)
+        return ((di + align - 1) // align) * align
+
+
+def init_slstm(key, cfg: SLSTMConfig, dtype):
+    ks = jax.random.split(key, 6)
+    di = cfg.d_inner
+    hd = di // cfg.n_heads
+    params, specs = {}, {}
+    params["w_up"], specs["w_up"] = init_linear(ks[0], cfg.d_model, (di,), ("embed", "ffn"), dtype)
+    # input-to-gates: z, i, f, o stacked
+    params["w_gates"], specs["w_gates"] = init_linear(ks[1], di, (4 * di,), ("ffn", None), dtype)
+    # hidden-to-gates recurrence: BLOCK-DIAGONAL per head (xLSTM §2.3 —
+    # "multiple heads ... recurrent connections only within each head").
+    # 4x fewer recurrence FLOPs/bytes than a dense di x 4di matrix, and the
+    # per-timestep weight-gradient all-reduce shrinks accordingly
+    # (EXPERIMENTS §Perf, xlstm cell).
+    params["r_gates"] = (
+        jax.random.normal(ks[2], (cfg.n_heads, hd, 4 * hd), jnp.float32)
+        * (hd ** -0.5 * 0.5)
+    ).astype(dtype)
+    specs["r_gates"] = (None, None, None)
+    params["w_down"], specs["w_down"] = init_linear(ks[3], di, (cfg.d_model,), ("ffn", "embed"), dtype)
+    return params, specs
+
+
+def _slstm_cell(params, di, xg, carry):
+    """One timestep. xg: (B, 4*di) pre-computed input gates; carry: dict."""
+    h, c, n, m = carry["h"], carry["c"], carry["n"], carry["m"]
+    nh, hd, _ = params["r_gates"].shape
+    b = h.shape[0]
+    # per-head recurrence: (B,H,hd) x (H,hd,4hd) -> (B,H,4hd) -> (B,4di) in
+    # the (z,i,f,o)-stacked layout
+    rec = jnp.einsum("bhd,hdg->bhg", h.reshape(b, nh, hd),
+                     params["r_gates"].astype(h.dtype))
+    rec = rec.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * di)
+    gates = xg + rec.astype(jnp.float32)
+    z, i, f, o = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_i = i  # exponential input gate (log-space value is the pre-activation)
+    log_f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * (c_new / jnp.maximum(jnp.abs(n_new), 1.0))
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def apply_slstm(cfg: SLSTMConfig, params, x, state=None):
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"])
+    xg = jnp.einsum("bsi,ig->bsg", up, params["w_gates"]).astype(jnp.float32)
+    if state is None:
+        state = slstm_state(cfg, b)
+
+    # exact chunking: the largest divisor of s not exceeding time_chunk, so
+    # no padded pseudo-steps ever touch the recurrent state
+    tc = 1
+    for cand in range(min(cfg.time_chunk, s), 0, -1):
+        if s % cand == 0:
+            tc = cand
+            break
+    xg_c = xg.transpose(1, 0, 2).reshape(s // tc, tc, b, 4 * di)
+
+    def chunk_step(carry, xg_chunk):
+        hs = []
+        st = carry
+        for t in range(tc):  # unrolled: w_gates/r_gates read once per chunk
+            st = _slstm_cell(params, di, xg_chunk[t], st)
+            hs.append(st["h"])
+        return st, jnp.stack(hs)
+
+    final, hs = jax.lax.scan(chunk_step, state, xg_c)
+    h = hs.reshape(s, b, di).transpose(1, 0, 2).astype(x.dtype)
+    y = jnp.einsum("bsi,id->bsd", h, params["w_down"])
+    return y, final
+
+
+def slstm_state(cfg: SLSTMConfig, batch: int):
+    di = cfg.d_inner
+    z = jnp.zeros((batch, di), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, di), -1e30, jnp.float32)}

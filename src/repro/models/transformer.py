@@ -1,0 +1,198 @@
+"""Decoder-only LM assembled from a layer-kind pattern, scanned over depth.
+
+Depth is expressed as full *cycles* of the pattern executed under
+``jax.lax.scan`` (stacked parameters, compact HLO independent of layer count)
+plus an unrolled remainder when ``n_layers % len(pattern) != 0``. This is the
+property that keeps 80-layer x 512-device dry-run compiles fast.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.layers import apply_norm, init_embedding, init_norm
+
+
+def _layer_plan(cfg):
+    c = len(cfg.pattern)
+    n_cycles = cfg.n_layers // c
+    rem = cfg.n_layers - n_cycles * c
+    return n_cycles, [cfg.pattern[i] for i in range(rem)]
+
+
+def init_params(cfg, key):
+    dtype = cfg.jnp_dtype
+    n_cycles, rem_kinds = _layer_plan(cfg)
+    keys = jax.random.split(key, 3 + len(cfg.pattern) + len(rem_kinds))
+    params, specs = {}, {}
+    params["emb"], specs["emb"] = init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype)
+    params["final_norm"], specs["final_norm"] = init_norm(cfg.norm_kind, cfg.d_model, dtype)
+
+    cyc_params, cyc_specs = [], []
+    for j, kind in enumerate(cfg.pattern):
+        _, spec1 = B.block_init(kind, keys[3 + j], cfg, dtype)
+        layer_keys = jax.random.split(keys[3 + j], max(n_cycles, 1))
+        if n_cycles > 0:
+            stacked = jax.vmap(lambda k: B.block_init(kind, k, cfg, dtype)[0])(layer_keys)
+        else:
+            stacked = None
+        cyc_params.append(stacked)
+        cyc_specs.append(jax.tree.map(lambda ax: (None,) + tuple(ax), spec1,
+                                      is_leaf=lambda x: isinstance(x, tuple)))
+    params["cycles"] = cyc_params
+    specs["cycles"] = cyc_specs
+
+    rem_params, rem_specs = [], []
+    for i, kind in enumerate(rem_kinds):
+        p, s = B.block_init(kind, keys[3 + len(cfg.pattern) + i], cfg, dtype)
+        rem_params.append(p)
+        rem_specs.append(s)
+    params["rem"] = rem_params
+    specs["rem"] = rem_specs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.remat == "save_tp":
+        # save the post-all-reduce activations: the backward recompute pass
+        # then contains ZERO tensor-parallel collectives (1/3 of the TP
+        # all-reduce volume under full remat), at +2 saved activations/layer
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "tp_attn_out", "tp_mlp_out"
+            ),
+        )
+    raise ValueError(cfg.remat)
+
+
+def _run_layers(cfg, params, x, positions, caches=None, decode=False, mesh=None):
+    """Shared depth loop. caches: None | {'cycles': [...], 'rem': [...]}"""
+    n_cycles, rem_kinds = _layer_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if n_cycles > 0:
+        have_cache = caches is not None
+
+        def cycle_body(carry, xs):
+            x, aux = carry
+            cyc_p = xs[0]
+            cyc_c = xs[1] if have_cache else [None] * len(cfg.pattern)
+            new_caches = []
+            for j, kind in enumerate(cfg.pattern):
+                x, nc, a = B.block_apply(
+                    kind, cfg, cyc_p[j], x, positions,
+                    cache=cyc_c[j], decode=decode, mesh=mesh,
+                )
+                aux = aux + a
+                new_caches.append(nc)
+            return (x, aux), (tuple(new_caches) if have_cache else 0)
+
+        body = _maybe_remat(cfg, cycle_body) if not decode and caches is None else cycle_body
+        xs = (tuple(params["cycles"]),)
+        if have_cache:
+            xs = xs + (tuple(caches["cycles"]),)
+        (x, aux), ys = jax.lax.scan(body, (x, aux), xs)
+        new_cycle_caches = list(ys) if have_cache else None
+    else:
+        new_cycle_caches = caches["cycles"] if caches is not None else None
+
+    new_rem = []
+    for i, kind in enumerate(rem_kinds):
+        c = caches["rem"][i] if caches is not None else None
+        x, nc, a = B.block_apply(
+            kind, cfg, params["rem"][i], x, positions, cache=c, decode=decode, mesh=mesh
+        )
+        aux = aux + a
+        new_rem.append(nc)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"cycles": new_cycle_caches, "rem": new_rem}
+    return x, new_caches, aux
+
+
+def embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["emb"], tokens, axis=0).astype(cfg.jnp_dtype)
+    return x * math.sqrt(cfg.d_model)
+
+
+def logits_from(cfg, params, x):
+    return jnp.einsum("bsd,vd->bsv", x, params["emb"]).astype(jnp.float32)
+
+
+def forward(cfg, params, tokens, prefix_embeds: Optional[jnp.ndarray] = None,
+            caches=None, mesh=None, logits_positions: Optional[str] = None):
+    """Full-sequence forward. Returns (logits, new_caches, aux).
+
+    logits_positions="last" computes logits for the final position only —
+    the prefill path, where the (B, S, V) logit tensor would otherwise be
+    the single largest compute+traffic term.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, new_caches, aux = _run_layers(cfg, params, x, positions, caches=caches, mesh=mesh)
+    if logits_positions == "last":
+        x = x[:, -1:]
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    return logits_from(cfg, params, x), new_caches, aux
+
+
+def loss_fn(cfg, params, batch, mesh=None):
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, prefix]."""
+    logits, _, aux = forward(
+        cfg, params, batch["tokens"], prefix_embeds=batch.get("prefix_embeds"), mesh=mesh
+    )
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vision prefix: score text positions only
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_caches(cfg, batch: int, max_seq: int):
+    n_cycles, rem_kinds = _layer_plan(cfg)
+    dtype = cfg.jnp_dtype
+
+    def stack_cache(kind):
+        one = B.block_cache(kind, cfg, batch, max_seq, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_cycles,) + a.shape), one)
+
+    cycles = [stack_cache(kind) for kind in cfg.pattern] if n_cycles else []
+    rem = [B.block_cache(kind, cfg, batch, max_seq, dtype) for kind in rem_kinds]
+    return {"cycles": cycles, "rem": rem}
+
+
+def prefill(cfg, params, tokens, max_seq: int,
+            prefix_embeds: Optional[jnp.ndarray] = None, mesh=None):
+    caches = init_caches(cfg, tokens.shape[0], max_seq)
+    logits, caches, _ = forward(
+        cfg, params, tokens, prefix_embeds=prefix_embeds, caches=caches,
+        mesh=mesh, logits_positions="last",
+    )
+    return logits, caches
+
+
+def decode_step(cfg, params, caches, tokens1, pos, mesh=None):
+    """tokens1: (B, 1) new token ids; pos: (B,) absolute positions."""
+    x = embed_tokens(cfg, params, tokens1)
+    x, new_caches, _ = _run_layers(cfg, params, x, pos, caches=caches, decode=True, mesh=mesh)
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    return logits_from(cfg, params, x), new_caches

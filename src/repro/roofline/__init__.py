@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    model_flops,
+)
+
+__all__ = ["HW_V5E", "collective_bytes_from_hlo", "roofline_terms", "model_flops"]

@@ -1,0 +1,131 @@
+"""Three-term roofline from compiled XLA artifacts (no hardware needed).
+
+    T_compute    = HLO_FLOPs(per device)      / peak_FLOP/s
+    T_memory     = HLO_bytes(per device)      / HBM_bw
+    T_collective = collective_bytes(per dev)  / link_bw
+
+HLO_FLOPs and HLO_bytes come from ``compiled.cost_analysis()`` (already
+per-device under SPMD). collective_bytes is parsed from the compiled HLO
+text: the summed operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async *-start variants
+counted once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e, per chip
+HW_V5E = {
+    "peak_flops": 197e12,     # bf16 FLOP/s
+    "hbm_bw": 819e9,          # bytes/s
+    "link_bw": 50e9,          # bytes/s/link ICI
+    "hbm_bytes": 16e9,        # capacity
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind. Returns {kind: bytes, total}."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind, args = m.group(1), m.group(2)
+        b = 0
+        for sm in _SHAPE_RE.finditer(args):
+            dtype, dims = sm.group(1), sm.group(2)
+            if dtype in _DTYPE_BYTES:
+                b += _shape_bytes(dtype, dims)
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return {"bytes": out, "counts": count}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+        }
+
+
+def roofline_terms(flops: float, bytes_accessed: float, collective_bytes: float,
+                   hw: dict = HW_V5E) -> RooflineTerms:
+    return RooflineTerms(
+        t_compute=flops / hw["peak_flops"],
+        t_memory=bytes_accessed / hw["hbm_bw"],
+        t_collective=collective_bytes / hw["link_bw"],
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N_active for MoE."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def mfu_fraction(terms: RooflineTerms, useful_flops_per_device: float,
+                 hw: dict = HW_V5E) -> float:
+    """Model-FLOPs utilization implied by the roofline bound: the fraction of
+    peak compute the step achieves if it runs exactly at its binding term."""
+    if terms.bound_time <= 0:
+        return 0.0
+    return (useful_flops_per_device / hw["peak_flops"]) / terms.bound_time

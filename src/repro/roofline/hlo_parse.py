@@ -1,0 +1,433 @@
+"""Structural analysis of compiled HLO text.
+
+XLA's ``HloCostAnalysis`` (exposed as ``compiled.cost_analysis()``) visits
+every computation ONCE — a ``lax.scan`` over 16 layers contributes its body
+cost a single time, under-counting FLOPs, HBM traffic and collective bytes
+by the trip count. The dry-run programs lean heavily on scan (layer cycles,
+online-softmax KV chunks, mLSTM chunks, microbatch accumulation), so this
+module re-derives the three roofline inputs from the HLO text itself:
+
+  1. parse computations + ops (+ operand symbol tables),
+  2. build the call graph (calls= / to_apply= / body= / condition=),
+  3. infer while trip counts from the loop-condition's integer constant,
+  4. propagate multipliers: a computation's cost counts once per dynamic
+     execution,
+  5. sum dot FLOPs, collective bytes, and an HBM-traffic proxy, each scaled
+     by its computation's multiplier.
+
+Traffic proxy: for every op outside fused subcomputations, bytes(result) +
+bytes(operands) — i.e. each op reads inputs and writes outputs to HBM;
+internals of fusions are skipped (counted once at the fusion call site),
+which is exactly the locality XLA's fusion gives you on hardware.
+
+Collective byte convention (per device, per execution):
+  all-reduce          result bytes        (ring sends ~2x; reported raw)
+  all-gather          result bytes        (the full gathered tensor moves)
+  reduce-scatter      operand bytes       (the full tensor is reduced)
+  all-to-all          result bytes
+  collective-permute  result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] token in `text`."""
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_TOKEN.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str          # raw result-shape text
+    opcode: str
+    args: str           # raw text inside the top-level parens
+    attrs: str          # raw text after the closing paren
+    operands: list      # %names referenced in args
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict       # op name -> result shape text
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _split_args_attrs(rest: str) -> tuple[str, str]:
+    """rest starts right after the opcode's '('; split at its matching ')'."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def _balanced(s: str, open_ch: str, close_ch: str) -> int:
+    """Index one past the matching close for s[0] == open_ch."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == open_ch:
+            depth += 1
+        elif ch == close_ch:
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Manual tokenizer: handles tuple result shapes containing layout braces
+    and /*index=N*/ comments, which defeat any single regex."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple-shaped result
+        cut = _balanced(rest, "(", ")")
+        shape, rest = rest[:cut], rest[cut:]
+    else:  # single shape token: dtype[dims]{layout}? — no spaces inside
+        sm = re.match(r"\s*(\w+\[[^\]]*\](?:\{[^ ]*\})?)", rest)
+        if not sm:
+            return None
+        shape, rest = sm.group(1), rest[sm.end():]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    args, attrs = _split_args_attrs(rest[om.end():])
+    operands = re.findall(r"%[\w\.\-]+", args)
+    return Op(name=name, shape=shape, opcode=opcode, args=args,
+              attrs=attrs, operands=operands)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _is_header(line: str) -> str | None:
+    """Computation headers look like '[ENTRY ]%name (params...) -> ret {'.
+
+    Op lines start with '%name = ...'; headers have no '=' in the name part
+    (before the first '('), once /*...*/ comments are stripped.
+    """
+    stripped = _COMMENT_RE.sub("", line).strip()
+    if not stripped.endswith("{"):
+        return None
+    head = stripped.split("(", 1)[0]
+    if "=" in head:
+        return None
+    toks = head.split()
+    if not toks:
+        return None
+    name = toks[-1] if toks[0] == "ENTRY" and len(toks) > 1 else toks[0]
+    if not re.fullmatch(r"%?[\w\.\-]+", name):
+        return None
+    return name.lstrip("%")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            name = _is_header(line)
+            if name:
+                cur = Computation(name, [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is None:
+            continue
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.shape
+    return comps
+
+
+def _callee_names(op: Op) -> list[tuple[str, str]]:
+    """[(kind, computation_name)] referenced by this op's attributes."""
+    out = []
+    for kind in ("calls", "to_apply", "body", "condition"):
+        m = re.search(kind + r"=(%?[\w\.\-]+)", op.attrs)
+        if m:
+            out.append((kind, m.group(1).lstrip("%")))
+    return out
+
+
+def _while_trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    ints = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.fullmatch(r"\s*(\d+)\s*", op.args)
+            if m:
+                ints.append(int(m.group(1)))
+    return max(ints) if ints else 1
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> tuple[dict, set]:
+    """Returns ({computation: dynamic execution count}, fused_internal set).
+
+    Roots are entry computations (no callers). Multipliers propagate along
+    call edges; while bodies/conditions get x trip_count. Computations called
+    via calls=/to_apply= are marked fused-internal for the traffic proxy.
+    """
+    callers: dict[str, list] = defaultdict(list)
+    fused_internal: set[str] = set()
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            for kind, callee in _callee_names(op):
+                if callee not in comps:
+                    continue
+                trip = 1
+                if kind == "body":
+                    trip = _while_trip_count(
+                        comps, dict(_callee_names(op)).get("condition", "")
+                    )
+                if kind in ("calls", "to_apply"):
+                    fused_internal.add(callee)
+                callers[callee].append((cname, trip))
+
+    mult: dict[str, float] = {}
+
+    def resolve(name: str, stack=()):
+        if name in mult:
+            return mult[name]
+        if name in stack:  # recursion guard
+            return 1.0
+        if not callers[name]:
+            mult[name] = 1.0
+            return 1.0
+        total = 0.0
+        for caller, trip in callers[name]:
+            total += resolve(caller, stack + (name,)) * trip
+        mult[name] = max(total, 1.0)
+        return mult[name]
+
+    for name in comps:
+        resolve(name)
+    return mult, fused_internal
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 x numel(result) x contracted size (from lhs shape + contracting dims)."""
+    res = _shape_dims(op.shape)
+    if not res:
+        return 0.0
+    numel = 1
+    for d in res[0][1]:
+        numel *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs_shape = comp.symbols.get(op.operands[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)
+            if dims:
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(dims[0][1]):
+                        contract *= dims[0][1][idx]
+    return 2.0 * numel * contract
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "call", "after-all", "iota"}
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    mult, fused = computation_multipliers(comps)
+    called: set = set(fused)
+    for comp in comps.values():
+        for op in comp.ops:
+            for _, callee in _callee_names(op):
+                called.add(callee)
+    entry_comps = [c for c in comps if c not in called]
+
+    flops = 0.0
+    traffic_all = 0.0     # upper bound: every op reads/writes HBM
+    traffic_dot = 0.0     # TPU-fusion model: matmuls + state updates + colls
+    traffic_by_op: dict[str, float] = defaultdict(float)
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, float] = defaultdict(float)
+    while_trips: list = []
+    # XLA:CPU's FloatNormalization materializes f32 copies of large bf16
+    # buffers (while carries, params) because the host has no native bf16.
+    # These buffers DO NOT EXIST in a TPU executable; their total is reported
+    # so memory_analysis() can be corrected (see dryrun.py).
+    cpu_upcast = 0.0
+    _UPCAST_MIN = 64 * 1024 * 1024
+    comp_reads: dict[str, set] = {}
+
+    _DOT_TRAFFIC_OPS = {"dot", "convolution", "dynamic-update-slice",
+                        "scatter", "gather"}
+    # `copy` is excluded: XLA:CPU materializes while-carry copies that TPU
+    # elides via buffer aliasing/donation — counting them triples the
+    # apparent traffic with ops that do not exist in the TPU executable.
+
+    def _is_upcast_wrapped(comp: Computation, op: Op) -> bool:
+        """XLA:CPU bf16 legalization: bf16 dots/collectives run as f32 with
+        converts hoisted/sunk around them (the CPU has no native bf16). If an
+        f32 collective's operand chain originates from bf16 values within a
+        few hops, its TPU intent dtype is bf16 — count half the bytes."""
+        if not op.shape.startswith("f32"):
+            return False
+        by_name = {o.name: o for o in comp.ops}
+
+        def origin_bf16(name: str, depth: int) -> bool:
+            d = by_name.get(name)
+            if d is None:
+                return False
+            if any(comp.symbols.get(o, "").startswith("bf16") for o in d.operands):
+                return True
+            if depth <= 0:
+                return False
+            return any(origin_bf16(o, depth - 1) for o in d.operands)
+
+        return any(origin_bf16(o, 3) for o in op.operands)
+
+    for cname, comp in comps.items():
+        k = mult.get(cname, 1.0)
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if op.opcode in ("dot", "convolution"):
+                flops += k * _dot_flops(op, comp)
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                if base == "reduce-scatter":
+                    b = sum(_shape_list_bytes(comp.symbols.get(o, ""))
+                            for o in op.operands)
+                else:
+                    b = _shape_list_bytes(op.shape)
+                if _is_upcast_wrapped(comp, op):
+                    b //= 2
+                coll_bytes[base] += k * b
+                coll_counts[base] += k
+                traffic_dot += k * b
+            op_io = None
+            if op.opcode not in _SKIP_TRAFFIC and not op.opcode.endswith("-done"):
+                if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+                    # read-modify-write of the *slice*, not the whole buffer
+                    op_io = 2 * _shape_list_bytes(
+                        comp.symbols.get(op.operands[1], "")
+                    )
+                else:
+                    op_io = _shape_list_bytes(op.shape)
+                    for o in op.operands:
+                        op_io += _shape_list_bytes(comp.symbols.get(o, ""))
+            if cname not in fused and op_io is not None:
+                traffic_all += k * op_io
+            if op.opcode in _DOT_TRAFFIC_OPS and op_io is not None:
+                # TPU-fusion view: elementwise chains live in VMEM; HBM
+                # traffic happens at matmul boundaries and explicit state
+                # updates (KV caches, optimizer writes), wherever they sit
+                # (incl. inside fusions). Reads are DEDUPED per computation
+                # execution below (an operand feeding several dots in one
+                # body crosses HBM once); only writes counted here.
+                if op.opcode == "dynamic-update-slice":
+                    traffic_dot += k * op_io
+                    traffic_by_op[op.opcode] += k * op_io
+                else:
+                    w = _shape_list_bytes(op.shape)
+                    traffic_dot += k * w
+                    traffic_by_op[op.opcode] += k * w
+                    comp_reads.setdefault(cname, set()).update(op.operands)
+            if op.opcode == "while":
+                cond = dict(_callee_names(op)).get("condition", "")
+                while_trips.append((cname, _while_trip_count(comps, cond)))
+                # f32 carry entries with a same-dims bf16 twin in the same
+                # tuple are FloatNormalization artifacts of the CPU backend:
+                # the TPU executable carries the bf16 buffer only.
+                entries = _shape_dims(op.shape)
+                bf16_dims = [tuple(d) for dt, d in entries if dt == "bf16"]
+                for dt, d in entries:
+                    if dt != "f32":
+                        continue
+                    b = 4
+                    for x in d:
+                        b *= x
+                    if b >= _UPCAST_MIN and tuple(d) in bf16_dims:
+                        cpu_upcast += b
+            if cname in entry_comps and op.opcode in ("convert", "fusion"):
+                # hoisted loop-invariant bf16->f32 conversions at the entry:
+                # distinct f32 buffers on CPU, absent on TPU
+                is_conv = op.opcode == "convert" or (
+                    "convert" in dict(_callee_names(op)).get("calls", "")
+                )
+                if is_conv and op.shape.startswith("f32") and op.operands:
+                    src = comp.symbols.get(op.operands[0], "")
+                    b = _shape_list_bytes(op.shape)
+                    if src.startswith("bf16") and b >= _UPCAST_MIN:
+                        cpu_upcast += b
+
+    # deduped dot-operand reads: each distinct buffer feeding the matmuls of
+    # one computation crosses HBM once per execution of that computation
+    for cname, names in comp_reads.items():
+        k = mult.get(cname, 1.0)
+        comp = comps[cname]
+        b = sum(_shape_list_bytes(comp.symbols.get(n, "")) for n in names)
+        traffic_dot += k * b
+        traffic_by_op["dot_reads_deduped"] += k * b
+
+    total = sum(coll_bytes.values())
+    return {
+        "flops_scaled": flops,
+        "traffic_bytes_scaled": traffic_all,
+        "traffic_dot_bytes_scaled": traffic_dot,
+        "traffic_by_opcode": dict(traffic_by_op),
+        "collective_bytes": dict(coll_bytes) | {"total": total},
+        "collective_counts": dict(coll_counts),
+        "while_trip_counts": while_trips,
+        "cpu_bf16_upcast_bytes": cpu_upcast,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,7 @@
+from repro.runtime.fault import (
+    FaultTolerantRunner,
+    StragglerMonitor,
+    PreemptionGuard,
+)
+
+__all__ = ["FaultTolerantRunner", "StragglerMonitor", "PreemptionGuard"]

@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    default_rules,
+    spec_for_axes,
+    build_param_specs,
+    batch_axes_for_mesh,
+)
+
+__all__ = [
+    "ShardingRules",
+    "default_rules",
+    "spec_for_axes",
+    "build_param_specs",
+    "batch_axes_for_mesh",
+]

@@ -1,0 +1,114 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Models annotate parameters with *logical* axes ("vocab", "heads", "ffn",
+"expert", ...). This module maps them onto the physical mesh with a
+divisibility guard: if a dimension cannot be evenly split over its assigned
+mesh axis (e.g. gemma3's 4 KV heads over a 16-way model axis) it falls back
+to replication and the fallback is recorded — the dry-run report surfaces
+every such decision, because each one is a sharding opportunity lost and a
+candidate for the perf loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import jax
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Mapping from logical axis name -> mesh axis (str, tuple, or None)."""
+
+    rules: dict
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+def batch_axes_for_mesh(mesh) -> tuple:
+    """DP axes: ("pod", "data") on the multi-pod mesh, ("data",) otherwise."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def default_rules(mesh, *, seq_shard: bool = False) -> ShardingRules:
+    ba = batch_axes_for_mesh(mesh)
+    return ShardingRules(rules={
+        "batch": ba,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_flat": "model",
+        "ffn": "model",
+        "expert": "model",
+        "embed": None,
+        "embed_out": None,
+        "head_dim": None,
+        "seq": "model" if seq_shard else None,
+        "kv_seq": "model",      # sequence-sharded KV caches (split-KV decode)
+        "layers": None,
+    })
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for_axes(mesh, rules: ShardingRules, logical_axes, shape=None,
+                  name: str = "?") -> P:
+    """Build a PartitionSpec for one array from its logical axes.
+
+    `logical_axes` is a tuple with one entry per dim (string or None). When
+    `shape` is given, divisibility is checked per-dim; failures replicate
+    that dim and are appended to rules.fallbacks.
+    """
+    entries = []
+    for i, lax_ in enumerate(logical_axes):
+        mesh_axes = rules.mesh_axes(lax_)
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        size = _axis_size(mesh, mesh_axes)
+        if shape is not None and shape[i] % size != 0:
+            rules.fallbacks.append(
+                f"{name}: dim {i} ({lax_}={shape[i]}) not divisible by "
+                f"{mesh_axes}({size}) -> replicated"
+            )
+            entries.append(None)
+            continue
+        entries.append(mesh_axes)
+    # PartitionSpec forbids using a mesh axis twice; replicate later dups
+    seen: set = set()
+    cleaned = []
+    for e in entries:
+        flat = (e,) if isinstance(e, str) else (e or ())
+        if any(a in seen for a in flat):
+            cleaned.append(None)
+            continue
+        seen.update(flat)
+        cleaned.append(e)
+    return P(*cleaned)
+
+
+def build_param_specs(mesh, rules: ShardingRules, shapes, logical_specs):
+    """Pytrees (ShapeDtypeStruct, logical axes) -> pytree of NamedSharding."""
+
+    def one(shape_struct, axes):
+        spec = spec_for_axes(mesh, rules, tuple(axes), shape_struct.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, shapes, logical_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

@@ -1,0 +1,107 @@
+"""AdamW + LR schedules + global-norm clipping (self-contained, no optax).
+
+Optimizer state mirrors the parameter pytree, so it inherits parameter
+sharding; with ZeRO-1 enabled the train-step builder re-shards m/v over the
+data axis (see train/loop.py) and XLA inserts the reduce-scatter/all-gather
+pair — the standard optimizer-state partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    import copy
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, update_shardings=None):
+    """Returns (new_params, new_state, metrics).
+
+    update_shardings (optional): a pytree of shardings (the ZeRO-1 m/v
+    layout). When given, the f32 master copy and the update math are pinned
+    to that DP-sharded layout, so the only replicated-over-data tensor is the
+    final bf16 parameter after the all-gather — the ZeRO-1 update flow.
+    """
+    grads32, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, us=None):
+        if us is not None:
+            g = jax.lax.with_sharding_constraint(g, us)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        p32 = p.astype(jnp.float32)
+        if us is not None:
+            p32 = jax.lax.with_sharding_constraint(p32, us)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p32
+        p_new32 = p32 - lr * delta
+        if us is not None:
+            p_new32 = jax.lax.with_sharding_constraint(p_new32, us)
+        return p_new32.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads32)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_us = (treedef.flatten_up_to(update_shardings)
+               if update_shardings is not None else [None] * len(flat_p))
+    out = [upd(p, g, m, v, us)
+           for p, g, m, v, us in zip(flat_p, flat_g, flat_m, flat_v, flat_us)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

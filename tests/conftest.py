@@ -1,0 +1,7 @@
+# NOTE: deliberately NOT setting --xla_force_host_platform_device_count here:
+# smoke tests and benches must see the real single device. Multi-device tests
+# run in subprocesses (tests/util.py) with their own XLA_FLAGS.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,151 @@
+"""Engine correctness + the paper's round-reduction claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import generators as gen
+from repro.engine import get_algorithm, run_sync, run_async_block, ALGORITHMS
+from repro.core.gograph import gograph_order
+from repro.core import baselines, metric
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    g = gen.scrambled(gen.powerlaw_cluster(1200, 4, seed=1), seed=9)
+    gw = gen.with_random_weights(g, seed=2)
+    return g, gw
+
+
+ALGO_GRAPH = [
+    ("pagerank", False), ("katz", False), ("php", False), ("adsorption", False),
+    ("sssp", True), ("bfs", False), ("cc", False), ("sswp", True),
+]
+
+
+@pytest.mark.parametrize("name,weighted", ALGO_GRAPH)
+def test_sync_matches_exact(graphs, name, weighted):
+    g, gw = graphs
+    algo = get_algorithm(name, gw if weighted else g)
+    r = run_sync(algo)
+    assert r.converged
+    np.testing.assert_allclose(r.x, algo.exact(), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name,weighted", ALGO_GRAPH)
+def test_async_matches_exact(graphs, name, weighted):
+    g, gw = graphs
+    algo = get_algorithm(name, gw if weighted else g)
+    r = run_async_block(algo, bs=128)
+    assert r.converged
+    np.testing.assert_allclose(r.x, algo.exact(), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name,weighted", [("pagerank", False), ("sssp", True),
+                                           ("php", False), ("bfs", False)])
+def test_async_fewer_rounds_than_sync(graphs, name, weighted):
+    """Paper observation (Fig. 1/2): async needs fewer rounds than sync."""
+    g, gw = graphs
+    algo = get_algorithm(name, gw if weighted else g)
+    rs = run_sync(algo)
+    ra = run_async_block(algo, bs=64)
+    assert ra.rounds <= rs.rounds
+
+
+@pytest.mark.parametrize("name,weighted", [("pagerank", False), ("php", False)])
+def test_gograph_reduces_rounds(graphs, name, weighted):
+    """The paper's headline: async + GoGraph converges in fewer sweeps than
+    async + (scrambled) default order."""
+    g, gw = graphs
+    graph = gw if weighted else g
+    algo = get_algorithm(name, graph)
+    rank = gograph_order(graph)
+    r_def = run_async_block(algo, bs=64)
+    r_gg = run_async_block(algo.relabel(rank), bs=64)
+    assert r_gg.rounds <= r_def.rounds
+    # and the result is still exact
+    np.testing.assert_allclose(
+        r_gg.x, algo.relabel(rank).exact(), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_relabel_preserves_solution(graphs):
+    g, gw = graphs
+    algo = get_algorithm("sssp", gw)
+    rank = baselines.degree_sort(gw)
+    r = run_async_block(algo.relabel(rank), bs=64)
+    inv = np.empty(gw.n, dtype=np.int64)
+    inv[rank] = np.arange(gw.n)
+    # un-relabel and compare to the original exact solution
+    np.testing.assert_allclose(r.x[rank], algo.exact(), atol=2e-5, rtol=1e-4)
+
+
+def test_inner_iterations_reduce_rounds(graphs):
+    g, _ = graphs
+    algo = get_algorithm("pagerank", g)
+    r1 = run_async_block(algo, bs=128, inner=1)
+    r2 = run_async_block(algo, bs=128, inner=2)
+    assert r2.rounds <= r1.rounds
+    np.testing.assert_allclose(r1.x, r2.x, atol=1e-4, rtol=1e-4)
+
+
+def test_convergence_trace_monotone(graphs):
+    """Monotone algorithms (paper Eq. 3): state sums move monotonically."""
+    g, _ = graphs
+    algo = get_algorithm("pagerank", g)
+    r = run_sync(algo)
+    sums = r.state_sums
+    assert np.all(np.diff(sums) >= -1e-3)  # increasing toward fixpoint
+
+
+@given(st.integers(30, 150), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_property_sync_async_same_fixpoint(n, seed):
+    g = gen.erdos_renyi(n, 3.0, seed=seed)
+    if g.m == 0:
+        return
+    algo = get_algorithm("pagerank", g)
+    rs = run_sync(algo)
+    ra = run_async_block(algo, bs=32)
+    np.testing.assert_allclose(rs.x, ra.x, atol=1e-4, rtol=1e-3)
+
+
+def test_distributed_engine_subprocess():
+    from tests.util import run_with_devices
+
+    run_with_devices("""
+import numpy as np
+from repro.graphs import generators as gen
+from repro.engine import get_algorithm, run_async_block
+from repro.engine.distributed import run_distributed
+g = gen.powerlaw_cluster(800, 4, seed=1)
+algo = get_algorithm('pagerank', g)
+r = run_distributed(algo, bs=32)
+assert r.converged
+np.testing.assert_allclose(r.x, algo.exact(), atol=2e-5, rtol=1e-4)
+rb = run_async_block(algo, bs=32)
+assert rb.rounds <= r.rounds <= 3 * rb.rounds + 5
+print('ok')
+""", n_devices=8)
+
+
+def test_priority_engine_exact_and_saves_work():
+    """Priter-style block scheduling: same fixpoint; less work on
+    frontier-style workloads (high-diameter SSSP)."""
+    from repro.engine.priority import run_priority_block
+    from repro.core.gograph import gograph_order
+
+    g = gen.scrambled(gen.barabasi_albert(3000, 1, seed=3), seed=7)
+    gw = gen.with_random_weights(g, seed=2)
+    rank = gograph_order(g)
+    algo = get_algorithm("sssp", gw).relabel(rank)
+    rf = run_async_block(algo, bs=64)
+    rp = run_priority_block(algo, bs=64, select_frac=0.125)
+    assert rp.converged
+    np.testing.assert_allclose(rp.x, algo.exact(), atol=2e-5, rtol=1e-4)
+    assert rp.rounds < rf.rounds  # strictly less edge-work
+
+    # and on PageRank (uniform convergence) it must still be exact
+    algo2 = get_algorithm("pagerank", g).relabel(rank)
+    rp2 = run_priority_block(algo2, bs=64, select_frac=0.25)
+    assert rp2.converged
+    np.testing.assert_allclose(rp2.x, algo2.exact(), atol=2e-4, rtol=1e-3)

@@ -1,0 +1,104 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import generators as gen
+from repro.graphs.graph import Graph, order_to_rank
+from repro.graphs.blocked import pack_in_edges, pack_bsr, num_blocks
+from repro.graphs import io as gio
+
+
+def small_graph():
+    return gen.powerlaw_cluster(300, 3, seed=0)
+
+
+def test_graph_basics():
+    g = small_graph()
+    assert g.n == 300 and g.m > 0
+    assert g.out_degrees().sum() == g.m
+    assert g.in_degrees().sum() == g.m
+    indptr, idx, eid = g.csr()
+    assert indptr[-1] == g.m
+    # CSR row v holds out-neighbors of v
+    for v in (0, 5, 100):
+        nbrs = set(g.out_neighbors(v).tolist())
+        assert nbrs == set(g.dst[g.src == v].tolist())
+
+
+def test_relabel_roundtrip():
+    g = small_graph()
+    rng = np.random.default_rng(0)
+    rank = rng.permutation(g.n)
+    g2 = g.relabel(rank)
+    # edges are preserved under relabeling
+    e1 = set(zip((rank[g.src]).tolist(), (rank[g.dst]).tolist()))
+    e2 = set(zip(g2.src.tolist(), g2.dst.tolist()))
+    assert e1 == e2
+
+
+def test_order_rank_involution():
+    order = np.array([3, 1, 0, 2])
+    rank = order_to_rank(order)
+    assert rank.tolist() == [2, 1, 3, 0]
+    assert order_to_rank(rank).tolist() == order.tolist()
+
+
+@given(st.integers(10, 200), st.integers(1, 4), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_generators_valid(n, m, seed):
+    g = gen.barabasi_albert(max(n, m + 2), min(m, n - 2) or 1, seed=seed)
+    assert g.src.min() >= 0 and g.src.max() < g.n
+    assert g.dst.min() >= 0 and g.dst.max() < g.n
+    # no self loops, no duplicate edges
+    assert not np.any(g.src == g.dst)
+    key = g.src.astype(np.int64) * g.n + g.dst
+    assert len(np.unique(key)) == g.m
+
+
+def test_pack_in_edges_complete():
+    g = small_graph()
+    bs = 32
+    be = pack_in_edges(g, bs)
+    assert be.nb == num_blocks(g.n, bs)
+    assert int(be.emask.sum()) == g.m
+    # reconstruct edges and compare
+    recon = []
+    for i in range(be.nb):
+        for j in range(be.e_max):
+            if be.emask[i, j]:
+                recon.append((int(be.esrc[i, j]), int(be.edst[i, j]) + i * bs))
+    assert sorted(recon) == sorted(zip(g.src.tolist(), g.dst.tolist()))
+
+
+def test_pack_bsr_matches_dense():
+    g = gen.erdos_renyi(100, 3.0, seed=1)
+    gw = gen.with_random_weights(g, seed=2)
+    bs = 16
+    bsr = pack_bsr(gw, bs, fill=0.0)
+    n_pad = bsr.nb * bs
+    dense = np.zeros((n_pad, n_pad), np.float32)
+    dense[gw.dst, gw.src] = gw.weights  # A[dst, src]
+    recon = np.zeros_like(dense)
+    for i in range(bsr.nb):
+        for k in range(bsr.k_max):
+            if bsr.colmask[i, k]:
+                c = bsr.cols[i, k]
+                recon[i * bs:(i + 1) * bs, c * bs:(c + 1) * bs] = bsr.tiles[i, k]
+    assert np.allclose(dense, recon)
+    stats = bsr.stats()
+    assert stats["nnz_blocks"] >= 1
+
+
+def test_io_roundtrip(tmp_path):
+    g = small_graph()
+    p = str(tmp_path / "g.txt")
+    with open(p, "w") as f:
+        f.write("# comment line\n")
+        for u, v in zip(g.src, g.dst):
+            f.write(f"{u} {v}\n")
+    g2 = gio.load_edge_list(p)
+    assert g2.n == g.n and g2.m == g.m
+    p2 = str(tmp_path / "g.npz")
+    gio.save_npz(g2, p2)
+    g3 = gio.load_npz(p2)
+    assert np.array_equal(g2.src, g3.src) and np.array_equal(g2.dst, g3.dst)

@@ -1,0 +1,106 @@
+"""Cross-cutting property tests (hypothesis) for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metric, baselines
+from repro.core.gograph import gograph_order
+from repro.engine import get_algorithm, run_sync
+from repro.graphs import generators as gen
+from repro.graphs.graph import Graph
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(10, 200))
+    kind = draw(st.sampled_from(["er", "ba", "plc"]))
+    seed = draw(st.integers(0, 50))
+    if kind == "er":
+        return gen.erdos_renyi(n, draw(st.floats(1.0, 5.0)), seed=seed)
+    if kind == "ba":
+        m = min(draw(st.integers(1, 3)), n - 2)
+        return gen.barabasi_albert(max(n, m + 2), m, seed=seed)
+    return gen.powerlaw_cluster(n, min(3, n - 2), seed=seed)
+
+
+@given(graphs(), st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_metric_reversal_identity(g, seed):
+    """For any order: M(rank) + M(reversed rank) == |E| exactly (every edge
+    is positive in precisely one of the two directions)."""
+    rng = np.random.default_rng(seed)
+    rank = rng.permutation(g.n).astype(np.int64)
+    rev = (g.n - 1) - rank
+    assert metric.metric_m(g, rank) + metric.metric_m(g, rev) == g.m
+
+
+@given(graphs())
+@settings(max_examples=15, deadline=None)
+def test_all_reorderers_emit_permutations(g):
+    for name, fn in baselines.all_reorderers().items():
+        rank = fn(g)
+        assert sorted(rank.tolist()) == list(range(g.n)), name
+
+
+@given(graphs(), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_relabel_invariance_of_fixpoint(g, seed):
+    """Solving a relabeled instance and mapping back gives the original
+    solution — for any permutation, any monotone algorithm."""
+    if g.m == 0:
+        return
+    rng = np.random.default_rng(seed)
+    rank = rng.permutation(g.n).astype(np.int64)
+    algo = get_algorithm("pagerank", g)
+    r = run_sync(algo.relabel(rank))
+    np.testing.assert_allclose(r.x[rank], algo.exact(), atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 20))
+@settings(max_examples=25, deadline=None)
+def test_kv_quantization_error_bound(hd, heads, seed):
+    """int8 KV round-trip error is bounded by scale/2 = max|x|/254."""
+    import jax.numpy as jnp
+    from repro.models.blocks import _quantize_kv, _dequantize_kv
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 3, heads, hd)).astype(np.float32))
+    q, s = _quantize_kv(x)
+    back = _dequantize_kv(q, s, jnp.float32)
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1) / 127.0 * 0.5 + 1e-6)
+    err = np.asarray(jnp.abs(back - x))
+    assert (err <= bound[..., None] + 1e-6).all()
+
+
+@given(st.integers(20, 100), st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_block_fresh_fractions_partition(n, seed):
+    g = gen.erdos_renyi(n, 3.0, seed=seed)
+    if g.m == 0:
+        return
+    rank = gograph_order(g)
+    f = metric.block_fresh_fraction(g, rank, bs=16)
+    assert abs(f["fresh"] + f["intra"] + f["stale"] - 1.0) < 1e-9
+
+
+def test_dryrun_single_cell_subprocess():
+    """The dry-run deliverable end-to-end for one cell (512 host devices)."""
+    import json
+    import subprocess
+    import sys
+    import tempfile
+
+    out = tempfile.mkdtemp()
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "decode_32k", "--mesh", "single", "--out", out],
+        capture_output=True, text=True, timeout=900,
+        env={**__import__("os").environ,
+             "PYTHONPATH": "src:" + __import__("os").environ.get("PYTHONPATH", "")},
+        cwd=__import__("os").path.join(__import__("os").path.dirname(__file__), ".."),
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(f"{out}/olmo-1b__decode_32k__pod_16x16.json"))
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["memory"]["fits_16g"]

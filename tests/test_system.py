@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system: the full
+reorder -> execute -> converge pipeline, engine cross-agreement, and the
+integrated fault-tolerant driver."""
+import numpy as np
+import pytest
+
+from repro.core import metric
+from repro.core.baselines import all_reorderers
+from repro.core.gograph import gograph_order
+from repro.engine import get_algorithm, run_async_block, run_sync
+from repro.engine.priority import run_priority_block
+from repro.graphs import generators as gen
+from repro.kernels.ops import run_async_block_pallas
+
+
+@pytest.fixture(scope="module")
+def system_graph():
+    return gen.scrambled(gen.powerlaw_cluster(2500, 4, seed=5), seed=11)
+
+
+def test_end_to_end_pipeline(system_graph):
+    """The paper's full pipeline: reorder, run async, beat sync in rounds,
+    agree with the exact solution."""
+    g = system_graph
+    rank = gograph_order(g)
+    assert metric.metric_m(g, rank) >= g.m / 2  # Theorem 2
+    algo = get_algorithm("pagerank", g).relabel(rank)
+    r_sync = run_sync(algo)
+    r_async = run_async_block(algo, bs=64, inner=2)
+    assert r_async.converged and r_sync.converged
+    assert r_async.rounds < r_sync.rounds
+    np.testing.assert_allclose(r_async.x, algo.exact(), atol=2e-5, rtol=1e-4)
+
+
+def test_all_engines_agree(system_graph):
+    """sync / block-GS / fused-Pallas / priority all reach the same fixpoint."""
+    g = system_graph
+    rank = gograph_order(g)
+    algo = get_algorithm("pagerank", g).relabel(rank)
+    xs = {
+        "sync": run_sync(algo).x,
+        "async": run_async_block(algo, bs=64).x,
+        "pallas": run_async_block_pallas(algo, bs=64, max_iters=300).x,
+        "priority": run_priority_block(algo, bs=64).x,
+    }
+    ref = algo.exact()
+    for name, x in xs.items():
+        np.testing.assert_allclose(x, ref, atol=2e-4, rtol=1e-3, err_msg=name)
+
+
+def test_every_reorderer_preserves_solutions(system_graph):
+    """Reordering must NEVER change results, only the round count."""
+    g = system_graph
+    algo = get_algorithm("bfs", g)
+    base = algo.exact()
+    for name, fn in all_reorderers().items():
+        rank = fn(g)
+        r = run_async_block(algo.relabel(rank), bs=128)
+        inv = np.empty(g.n, dtype=np.int64)
+        inv[rank] = np.arange(g.n)
+        np.testing.assert_allclose(r.x[rank], base, atol=1e-5, err_msg=name)
+
+
+def test_fault_tolerant_graph_driver(tmp_path):
+    """examples/graph_end2end.py's core path: macro-steps + checkpoint +
+    injected failure, converging to the exact answer."""
+    from repro.ckpt.manager import CheckpointManager
+    from repro.runtime.fault import FaultTolerantRunner
+
+    g = gen.scrambled(gen.powerlaw_cluster(1200, 4, seed=2), seed=3)
+    algo = get_algorithm("pagerank", g).relabel(gograph_order(g))
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    injected = {"done": False}
+
+    def step_fn(state, step):
+        if step == 1 and not injected["done"]:
+            injected["done"] = True
+            raise RuntimeError("injected")
+        r = run_async_block(algo, bs=64, max_iters=5, x_init=state["x"])
+        return {"x": r.x, "rounds": state["rounds"] + r.rounds,
+                "converged": bool(r.converged)}
+
+    def save_fn(step, state):
+        mgr.save(step, {"x": state["x"], "rounds": np.int64(state["rounds"])})
+
+    def restore_fn():
+        tree, man = mgr.restore()
+        return ({"x": tree["['params']['x']"],
+                 "rounds": int(tree["['params']['rounds']"]),
+                 "converged": False}, man["step"])
+
+    runner = FaultTolerantRunner(step_fn, save_fn, restore_fn, ckpt_every=1,
+                                 max_failures=2)
+    state = {"x": algo.x0, "rounds": 0, "converged": False}
+    state, _ = runner.run(state, steps=12)
+    assert runner.failures == 1
+    assert state["converged"]
+    np.testing.assert_allclose(state["x"], algo.exact(), atol=2e-5, rtol=1e-4)
