@@ -1,0 +1,77 @@
+"""Batched multi-query throughput: d queries as one f32[n, d] run vs d
+serial scalar runs.
+
+The tentpole claim of the batched execution engine: personalized PageRank
+from d seeds (and multi-source SSSP from d sources) shares every per-round
+gather/segment-reduce across the batch, so queries/sec scales far better
+than re-running the scalar engine d times. Per-column convergence freezing
+keeps the round counts honest — each query stops contributing at exactly its
+scalar round count, so the batched run does no extra rounds of useful work.
+
+CSV rows report queries/sec for serial vs batched at each d, for both the
+sync engine and the block Gauss-Seidel engine.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, save_json
+from repro.engine import (
+    multi_source_sssp, personalized_pagerank, run_async_block, run_sync,
+)
+from repro.graphs import generators as gen
+
+
+def _qps(fn, n_queries: int, repeats: int = 1) -> tuple[float, float]:
+    """Returns (queries/sec, seconds) for the best of `repeats` timings."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return n_queries / best, best
+
+
+def run(out_dir: str = "experiments/paper"):
+    n = 400 if FAST else 3000
+    ds = [2, 4] if FAST else [4, 16, 64]
+    g = gen.scrambled(gen.powerlaw_cluster(n, 4, seed=1), seed=9)
+    gw = gen.with_random_weights(g, seed=2)
+    rng = np.random.default_rng(0)
+
+    rows = []
+    payload = {"n": g.n, "m": g.m, "series": {}}
+    cases = [
+        ("ppr/sync", lambda a: run_sync(a), personalized_pagerank, g),
+        ("ppr/async", lambda a: run_async_block(a, bs=128), personalized_pagerank, g),
+        ("ms_sssp/async", lambda a: run_async_block(a, bs=128), multi_source_sssp, gw),
+    ]
+    for cname, engine, make, graph in cases:
+        payload["series"][cname] = []
+        for d in ds:
+            seeds = rng.choice(graph.n, size=d, replace=False)
+            batched = make(graph, seeds)
+            scalars = [make(graph, [s]) for s in seeds]
+            # warm up jit caches for both shapes before timing
+            engine(batched)
+            engine(scalars[0])
+            qps_b, t_b = _qps(lambda: engine(batched), d)
+            qps_s, t_s = _qps(lambda: [engine(a) for a in scalars], d)
+            speedup = qps_b / qps_s
+            rows.append((
+                f"batched/{cname}/d{d}", t_b * 1e6,
+                f"batched={qps_b:.1f}q/s serial={qps_s:.1f}q/s speedup={speedup:.2f}x",
+            ))
+            payload["series"][cname].append({
+                "d": int(d), "qps_batched": qps_b, "qps_serial": qps_s,
+                "speedup": speedup,
+            })
+    save_json(out_dir, "batched_queries", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(*r, sep=",")

@@ -3,7 +3,7 @@ async round reduction survives block Gauss-Seidel, as a function of block
 size bs (VMEM tile granularity) and inner sweeps."""
 from __future__ import annotations
 
-from benchmarks.common import BENCH_GRAPHS, run_one, save_json
+from benchmarks.common import BENCH_GRAPHS, save_json
 from repro.core import metric
 from repro.core.gograph import gograph_order
 from repro.engine import get_algorithm, run_sync, run_async_block

@@ -10,21 +10,30 @@ import json
 import os
 import time
 
-import numpy as np
 
-from repro.core import baselines, metric
-from repro.core.gograph import gograph_order
+from repro.core import baselines
 from repro.engine import get_algorithm, run_sync, run_async_block
 from repro.graphs import generators as gen
 
 OUT_DEFAULT = "experiments/paper"
 
+# REPRO_BENCH_FAST=1 (set by `benchmarks/run.py --fast`, used by the CI
+# smoke job) shrinks every graph ~10x so the whole suite exercises its real
+# code paths in seconds instead of minutes.
+FAST = os.environ.get("REPRO_BENCH_FAST", "") == "1"
+_SCALE = 0.1 if FAST else 1.0
+
+
+def _sz(n: int) -> int:
+    return max(64, int(n * _SCALE))
+
+
 # name -> (graph thunk, weighted variant needed)
 BENCH_GRAPHS = {
-    "ic-like": lambda: gen.scrambled(gen.powerlaw_cluster(4000, 6, p=0.5, seed=1), seed=11),
-    "wk-like": lambda: gen.scrambled(gen.barabasi_albert(8000, 3, seed=4), seed=12),
-    "cp-like": lambda: gen.scrambled(gen.erdos_renyi(6000, 5.0, seed=5), seed=13),
-    "lj-like": lambda: gen.scrambled(gen.community_graph(6000, 60, 7.0, 0.85, seed=6), seed=14),
+    "ic-like": lambda: gen.scrambled(gen.powerlaw_cluster(_sz(4000), 6, p=0.5, seed=1), seed=11),
+    "wk-like": lambda: gen.scrambled(gen.barabasi_albert(_sz(8000), 3, seed=4), seed=12),
+    "cp-like": lambda: gen.scrambled(gen.erdos_renyi(_sz(6000), 5.0, seed=5), seed=13),
+    "lj-like": lambda: gen.scrambled(gen.community_graph(_sz(6000), 60 if not FAST else 12, 7.0, 0.85, seed=6), seed=14),
 }
 
 ALGOS = ["pagerank", "sssp", "bfs", "php"]  # the paper's four workloads

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import BENCH_GRAPHS, reorderers, run_one, save_json
+from benchmarks.common import BENCH_GRAPHS, run_one, save_json
 from repro.core.gograph import gograph_order
 
 

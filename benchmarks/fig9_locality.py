@@ -10,13 +10,11 @@ divide phase.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import BENCH_GRAPHS, reorderers, save_json
 from repro.core import metric
 from repro.core.gograph import GoGraphConfig, gograph_order
 from repro.graphs.blocked import pack_bsr
-from repro.graphs.graph import Graph
 
 
 def run(out_dir: str = "experiments/paper"):

@@ -5,13 +5,12 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import save_json
 from repro.core.gograph import gograph_order
 from repro.engine import get_algorithm
 from repro.graphs import generators as gen
-from repro.kernels import gs_sweep, bsr_spmm
+from repro.kernels import gs_sweep
 from repro.kernels.ops import pack_algorithm
 
 

@@ -1,11 +1,14 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes JSON payloads under
-experiments/paper/. ``python -m benchmarks.run [--only fig8]``.
+experiments/paper/. ``python -m benchmarks.run [--only fig8] [--fast]``.
+``--fast`` shrinks every graph ~10x (tiny graphs, few iters) — the CI smoke
+mode that keeps the benchmark scripts from rotting.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -21,6 +24,7 @@ MODULES = [
     "priority_sched",         # beyond-paper: Priter-style block scheduling
     "kernel_bench",           # Pallas kernel structural bench
     "roofline_report",        # dry-run roofline aggregation
+    "batched_queries",        # batched multi-query engine throughput
 ]
 
 
@@ -28,7 +32,13 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
     p.add_argument("--out", default="experiments/paper")
+    p.add_argument("--fast", action="store_true",
+                   help="tiny graphs / few iters (CI smoke mode)")
     args = p.parse_args()
+
+    if args.fast:
+        # must be set before any benchmark module imports benchmarks.common
+        os.environ["REPRO_BENCH_FAST"] = "1"
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     print("name,us_per_call,derived")

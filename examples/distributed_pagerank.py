@@ -17,7 +17,6 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax
 
-from repro.core import metric
 from repro.core.gograph import gograph_order
 from repro.engine import get_algorithm, run_async_block
 from repro.engine.distributed import run_distributed

@@ -9,13 +9,11 @@ the ~100M-parameter configuration for real hardware.
     PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
 """
 import argparse
-import dataclasses
 import sys
 import tempfile
 
 sys.path.insert(0, "src")
 
-import jax
 
 from repro.ckpt.manager import CheckpointManager
 from repro.configs import get_reduced

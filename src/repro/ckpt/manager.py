@@ -55,8 +55,13 @@ class CheckpointManager:
             "leaves": [],
             "extra": extra or {},
         }
-        # the tree structure is recorded as key paths (robust across versions)
-        paths = [jax.tree_util.keystr(kp) for kp, _ in jax.tree.flatten_with_path(tree)[0]]
+        # the tree structure is recorded as key paths (robust across versions);
+        # jax.tree.flatten_with_path only exists on jax >= 0.5 — go through
+        # tree_util, which carries it on the 0.4.x line too
+        paths = [
+            jax.tree_util.keystr(kp)
+            for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+        ]
         manifest["paths"] = paths
         for i, leaf in enumerate(flat):
             arr = np.asarray(jax.device_get(leaf))

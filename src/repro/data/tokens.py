@@ -16,7 +16,6 @@ training curves are meaningful in examples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import numpy as np

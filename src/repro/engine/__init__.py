@@ -1,13 +1,27 @@
-from repro.engine.algorithms import get_algorithm, ALGORITHMS, AlgoInstance
-from repro.engine.sync import run_sync
+from repro.engine.algorithms import (
+    ALGORITHMS,
+    AlgoInstance,
+    get_algorithm,
+    make_multi_source_sssp,
+    make_personalized_pagerank,
+    multi_source_sssp,
+    personalized_pagerank,
+)
 from repro.engine.async_block import run_async_block
 from repro.engine.distributed import run_distributed
+from repro.engine.priority import run_priority_block
+from repro.engine.sync import run_sync
 
 __all__ = [
     "get_algorithm",
     "ALGORITHMS",
     "AlgoInstance",
+    "personalized_pagerank",
+    "multi_source_sssp",
+    "make_personalized_pagerank",
+    "make_multi_source_sssp",
     "run_sync",
     "run_async_block",
     "run_distributed",
+    "run_priority_block",
 ]

@@ -36,16 +36,23 @@ class Semiring:
 
 @dataclasses.dataclass
 class AlgoInstance:
-    """A concrete algorithm bound to a concrete graph."""
+    """A concrete algorithm bound to a concrete graph.
+
+    State is *batched*: ``x0``, ``c``, ``fixed`` are ``(n, d)`` where column j
+    is an independent query (e.g. one personalized-PageRank seed or one SSSP
+    source). Scalar constructors pass 1-D arrays and are normalized to
+    ``d = 1`` here; every engine runs all columns in lockstep with per-column
+    convergence, so ``d = 1`` reproduces the scalar behavior exactly.
+    """
 
     name: str
     n: int
-    src: np.ndarray        # int32[m]   edge sources
-    dst: np.ndarray        # int32[m]   edge destinations
-    w: np.ndarray          # float32[m] transformed edge weights w'
-    x0: np.ndarray         # float32[n] initial states
-    c: np.ndarray          # float32[n] per-vertex constants
-    fixed: np.ndarray      # bool[n]    vertices pinned at x0 (e.g. PHP target)
+    src: np.ndarray        # int32[m]      edge sources
+    dst: np.ndarray        # int32[m]      edge destinations
+    w: np.ndarray          # float32[m]    transformed edge weights w'
+    x0: np.ndarray         # float32[n, d] initial states
+    c: np.ndarray          # float32[n, d] per-vertex constants
+    fixed: np.ndarray      # bool[n, d]    vertices pinned at x0 (e.g. PHP target)
     semiring: Semiring
     combine: str           # "replace" (c + agg) | "min_old" | "max_old"
     residual: str          # "linf" | "l1" | "changed"
@@ -53,9 +60,33 @@ class AlgoInstance:
     monotone_dir: int      # +1 increasing toward fixpoint, -1 decreasing
     exact_fn: Optional[Callable[[], np.ndarray]] = None
 
+    def __post_init__(self):
+        for f in ("x0", "c", "fixed"):
+            a = np.asarray(getattr(self, f))
+            if a.ndim == 1:
+                a = a.reshape(self.n, 1)
+            setattr(self, f, a)
+        if not (self.x0.shape == self.c.shape == self.fixed.shape):
+            raise ValueError(
+                f"x0/c/fixed shapes disagree: {self.x0.shape} "
+                f"{self.c.shape} {self.fixed.shape}"
+            )
+
     @property
     def m(self) -> int:
         return int(self.src.shape[0])
+
+    @property
+    def d(self) -> int:
+        """Number of queries batched in the state columns."""
+        return int(self.x0.shape[1])
+
+    @property
+    def c_pad_fill(self) -> float:
+        """Padding fill for the constant vector `c`: additive 0.0 under
+        "replace" combine, the reduce identity otherwise (0.0 is absorbing
+        under min/max and would corrupt padding rows)."""
+        return 0.0 if self.combine == "replace" else self.semiring.identity
 
     def exact(self) -> np.ndarray:
         assert self.exact_fn is not None
@@ -249,6 +280,66 @@ def make_sswp(g: Graph, source: int = 0) -> AlgoInstance:
 
 
 # --------------------------------------------------------------------------
+# batched multi-query constructors
+# --------------------------------------------------------------------------
+
+def make_personalized_pagerank(
+    g: Graph, seeds=None, damping: float = 0.85, eps: float = 1e-6,
+) -> AlgoInstance:
+    """Personalized PageRank from ``d = len(seeds)`` seeds at once.
+
+    Column j solves  x_v = (1-damping)*1[v == seeds[j]] + damping * sum_in
+    x_u / |OUT(u)| — the same linear system as :func:`make_pagerank` with a
+    one-hot restart vector, so all columns share the edge arrays and one
+    batched run answers every query.
+    """
+    seeds = np.asarray(seeds if seeds is not None else [0], dtype=np.int64)
+    if len(seeds) == 0:
+        raise ValueError("personalized_pagerank needs at least one seed")
+    d = len(seeds)
+    outdeg = np.maximum(g.out_degrees(), 1).astype(np.float32)
+    w = (damping * g.weights / outdeg[g.src]).astype(np.float32)
+    c = np.zeros((g.n, d), np.float32)
+    c[seeds, np.arange(d)] = 1.0 - damping
+    return AlgoInstance(
+        name="ppr", n=g.n, src=g.src.copy(), dst=g.dst.copy(), w=w,
+        x0=np.zeros((g.n, d), np.float32), c=c,
+        fixed=np.zeros((g.n, d), bool),
+        semiring=Semiring("sum", "mul"), combine="replace",
+        residual="linf", eps=eps, monotone_dir=+1,
+        exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w, c),
+    )
+
+
+def make_multi_source_sssp(g: Graph, sources=None, eps: float = 0.5) -> AlgoInstance:
+    """Single-source shortest paths from ``d = len(sources)`` sources at once;
+    column j is the distance field of source j."""
+    sources = np.asarray(sources if sources is not None else [0], dtype=np.int64)
+    if len(sources) == 0:
+        raise ValueError("multi_source_sssp needs at least one source")
+    d = len(sources)
+    x0 = np.full((g.n, d), BIG, np.float32)
+    x0[sources, np.arange(d)] = 0.0
+
+    def _exact() -> np.ndarray:
+        return np.stack([_exact_dijkstra(g, int(s)) for s in sources], axis=1)
+
+    return AlgoInstance(
+        name="ms_sssp", n=g.n, src=g.src.copy(), dst=g.dst.copy(),
+        w=g.weights.copy(), x0=x0, c=np.full((g.n, d), BIG, np.float32),
+        fixed=np.zeros((g.n, d), bool),
+        semiring=Semiring("min", "add"), combine="min_old",
+        residual="changed", eps=eps, monotone_dir=-1,
+        exact_fn=_exact,
+    )
+
+
+# short aliases matching the README / benchmark vocabulary
+personalized_pagerank = make_personalized_pagerank
+multi_source_sssp = make_multi_source_sssp
+
+
+# --------------------------------------------------------------------------
 # exact references
 # --------------------------------------------------------------------------
 
@@ -257,17 +348,23 @@ def _exact_linear_sum(
     fixed: Optional[np.ndarray] = None, x_fixed: Optional[np.ndarray] = None,
     iters: int = 10_000, tol: float = 1e-12,
 ) -> np.ndarray:
-    """Jacobi to machine precision in float64 (reference for sum semirings)."""
-    x = np.zeros(n, np.float64)
+    """Jacobi to machine precision in float64 (reference for sum semirings).
+
+    ``c`` may be (n,) or (n, d); the result matches its shape (columns are
+    independent restart vectors).
+    """
+    c64 = np.asarray(c, np.float64)
+    x = np.zeros_like(c64)
     if fixed is not None:
-        x = np.where(fixed, x_fixed.astype(np.float64), x)
-    w64, c64 = w.astype(np.float64), c.astype(np.float64)
+        x = np.where(fixed, np.asarray(x_fixed, np.float64), x)
+    w64 = w.astype(np.float64)
+    wv = w64 if c64.ndim == 1 else w64[:, None]
     for _ in range(iters):
-        agg = np.zeros(n, np.float64)
-        np.add.at(agg, dst, x[src] * w64)
+        agg = np.zeros_like(x)
+        np.add.at(agg, dst, x[src] * wv)
         x_new = c64 + agg
         if fixed is not None:
-            x_new = np.where(fixed, x_fixed.astype(np.float64), x_new)
+            x_new = np.where(fixed, np.asarray(x_fixed, np.float64), x_new)
         if np.max(np.abs(x_new - x)) < tol:
             x = x_new
             break
@@ -307,6 +404,8 @@ ALGORITHMS: dict[str, Callable[..., AlgoInstance]] = {
     "bfs": make_bfs,
     "cc": make_cc,
     "sswp": make_sswp,
+    "ppr": make_personalized_pagerank,
+    "ms_sssp": make_multi_source_sssp,
 }
 
 

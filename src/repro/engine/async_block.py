@@ -4,15 +4,26 @@ The paper's Eq. 2 updates vertices one at a time in processing order, each
 consuming neighbors already updated *this* round. A per-vertex sequential
 sweep is degenerate on TPU, so we process the order in contiguous *blocks*
 (DESIGN.md §3): blocks run sequentially inside one sweep, each block update
-gathers the *current* state vector — blocks earlier in the order therefore
+gathers the *current* state matrix — blocks earlier in the order therefore
 contribute this-round values (positive edges at block granularity), later
 blocks contribute previous-round values, exactly Eq. 2 lifted to tiles.
+
+States are batched ``f32[n, d]``: column j is an independent query
+(personalized-PageRank seed, SSSP source, ...) riding the same sweep, with
+per-column convergence freezing in the shared round driver
+(`engine.harness.loop`) so each query keeps its scalar round count and final
+state. ``d = 1`` reproduces the scalar engine exactly.
 
 `inner > 1` re-runs each block update against the refreshed state, making
 intra-block edges fresh too (local Gauss–Seidel refinement); `inner=1` is the
 plain blocked sweep. The engine assumes the algorithm instance has already
 been relabeled with the processing order (``AlgoInstance.relabel``), so block
 b covers ordinals [b*bs, (b+1)*bs).
+
+``backend="pallas"`` runs each sweep as the fused `kernels.gs_sweep` Pallas
+kernel (BSR tiles, one kernel launch per sweep; interpret mode off-TPU)
+instead of the pure-JAX gather/segment-reduce sweep. Both backends share the
+convergence driver, so they agree on rounds and per-column bookkeeping.
 """
 from __future__ import annotations
 
@@ -24,27 +35,8 @@ import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.engine import harness
 from repro.engine import jax_ops as J
-from repro.graphs.blocked import pack_in_edges, padded_n
-from repro.graphs.graph import Graph
-
-
-def _pack(algo: AlgoInstance, bs: int):
-    g = Graph(algo.n, algo.src, algo.dst, algo.w)
-    be = pack_in_edges(g, bs)
-    npad = padded_n(algo.n, bs)
-
-    def pad(a, fill):
-        out = np.full((npad,), fill, dtype=a.dtype)
-        out[: algo.n] = a
-        return out
-
-    x0 = pad(algo.x0, algo.semiring.identity)
-    c = pad(algo.c, 0.0 if algo.combine == "replace" else algo.c.dtype.type(algo.semiring.identity))
-    fixed = np.zeros(npad, bool)
-    fixed[: algo.n] = algo.fixed
-    fixed[algo.n:] = True  # padding vertices never move
-    return be, x0, c, fixed, npad
 
 
 @partial(
@@ -60,21 +52,20 @@ def _run(
     sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
     eps: float, max_iters: int, identity: float, inner: int,
 ):
-    c_blk = c.reshape(nb, bs)
-    fixed_blk = fixed.reshape(nb, bs)
-    x0_blk = x0.reshape(nb, bs)
-    res_buf = jnp.zeros((max_iters,), jnp.float32)
-    sum_buf = jnp.zeros((max_iters,), jnp.float32)
+    d = x0.shape[1]
+    c_blk = c.reshape(nb, bs, d)
+    fixed_blk = fixed.reshape(nb, bs, d)
+    x0_blk = x0.reshape(nb, bs, d)
     real_mask = (jnp.arange(nb * bs) < n_real)
 
     def block_update(i, x):
         srcs = esrc[i]
         msgs = J.edge_op(sem_edge, x[srcs], ew[i])
-        msgs = jnp.where(emask[i], msgs, identity)
+        msgs = jnp.where(emask[i][:, None], msgs, identity)
         agg = J.segment_reduce(sem_reduce, msgs, edst[i], bs, identity)
-        old = jax.lax.dynamic_slice(x, (i * bs,), (bs,))
+        old = jax.lax.dynamic_slice(x, (i * bs, 0), (bs, d))
         new = J.combine(comb, agg, c_blk[i], old, fixed_blk[i], x0_blk[i])
-        return jax.lax.dynamic_update_slice(x, new, (i * bs,))
+        return jax.lax.dynamic_update_slice(x, new, (i * bs, 0))
 
     def block_body(i, x):
         def one(_, xx):
@@ -84,38 +75,57 @@ def _run(
     def sweep(x):
         return jax.lax.fori_loop(0, nb, block_body, x)
 
-    def cond(state):
-        _, k, res, _, _ = state
-        return jnp.logical_and(k < max_iters, res > eps)
+    return harness.loop(
+        sweep, x0, res_kind=res_kind, eps=eps, max_iters=max_iters,
+        real_mask=real_mask,
+    )
 
-    def body(state):
-        x, k, _, res_buf, sum_buf = state
-        x_new = sweep(x)
-        res = J.residual(res_kind, jnp.where(real_mask, x_new, 0), jnp.where(real_mask, x, 0))
-        res_buf = res_buf.at[k].set(res)
-        sum_buf = sum_buf.at[k].set(
-            jnp.sum(jnp.where(real_mask & (jnp.abs(x_new) < 1e30), x_new, 0.0))
+
+@partial(
+    jax.jit,
+    static_argnames=("semiring", "combine", "bs", "res_kind", "max_iters",
+                     "n_real", "interpret"),
+)
+def _run_pallas(
+    cols, tiles, c, x0, fixed, x_start,
+    semiring: str, combine: str, bs: int, n_real: int,
+    res_kind: str, eps: float, max_iters: int, interpret: bool,
+):
+    from repro.kernels.gs_sweep import gs_sweep_pallas
+
+    real_mask = (jnp.arange(x0.shape[0]) < n_real)
+
+    def sweep(x):
+        return gs_sweep_pallas(
+            cols, tiles, c, x0, fixed, x,
+            semiring=semiring, combine=combine, bs=bs, interpret=interpret,
         )
-        return x_new, k + 1, res, res_buf, sum_buf
 
-    init = (x0, jnp.int32(0), jnp.float32(jnp.inf), res_buf, sum_buf)
-    x, k, res, res_buf, sum_buf = jax.lax.while_loop(cond, body, init)
-    return x, k, res, res_buf, sum_buf
+    return harness.loop(
+        sweep, x_start, res_kind=res_kind, eps=eps, max_iters=max_iters,
+        real_mask=real_mask,
+    )
 
 
 def run_async_block(
     algo: AlgoInstance, bs: int = 256, max_iters: int = 2000, inner: int = 1,
-    x_init: np.ndarray | None = None,
+    x_init: np.ndarray | None = None, backend: str = "jax",
 ) -> RunResult:
-    """x_init: resume from a previous state (checkpointed macro-stepping)."""
-    be, x0, c, fixed, npad = _pack(algo, bs)
-    x_start = x0
-    if x_init is not None:
-        x_start = x0.copy()
-        x_start[: algo.n] = x_init
-    x, k, res, res_buf, sum_buf = _run(
+    """x_init: resume from a previous state (checkpointed macro-stepping).
+
+    backend: "jax" (gather/segment-reduce sweep) or "pallas" (fused
+    `gs_sweep` kernel per sweep; interpret mode off-TPU, sum/min semirings).
+    """
+    if backend == "pallas":
+        return _run_async_block_pallas(algo, bs, max_iters, inner, x_init)
+    if backend != "jax":
+        raise ValueError(f"unknown backend {backend!r}")
+    be, x0, c, fixed, npad = harness.pack(algo, bs)
+    x_start = harness.init_state(x0, x_init, algo.n)
+    out = _run(
         jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
-        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(c), jnp.asarray(fixed),
+        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(c),
+        jnp.asarray(fixed),
         bs=bs, nb=be.nb, n_real=algo.n,
         sem_reduce=algo.semiring.reduce,
         sem_edge=algo.semiring.edge_op,
@@ -126,11 +136,23 @@ def run_async_block(
         identity=algo.semiring.identity,
         inner=inner,
     )
-    k = int(k)
-    return RunResult(
-        x=np.asarray(x)[: algo.n],
-        rounds=k,
-        converged=bool(res <= algo.eps),
-        residuals=np.asarray(res_buf)[:k],
-        state_sums=np.asarray(sum_buf)[:k],
+    return harness.finalize(algo, *out)
+
+
+def _run_async_block_pallas(
+    algo, bs, max_iters, inner, x_init, interpret=None
+) -> RunResult:
+    from repro.kernels.ops import _auto_interpret, pack_algorithm
+
+    if inner != 1:
+        raise ValueError("backend='pallas' runs the fused sweep; inner must be 1")
+    ops = pack_algorithm(algo, bs)
+    x_start = harness.init_state(np.asarray(ops["x0"]), x_init, algo.n)
+    out = _run_pallas(
+        ops["cols"], ops["tiles"], ops["c"], ops["x0"], ops["fixed"],
+        jnp.asarray(x_start),
+        semiring=ops["semiring"], combine=ops["combine"], bs=bs,
+        n_real=algo.n, res_kind=algo.residual, eps=algo.eps,
+        max_iters=max_iters, interpret=_auto_interpret(interpret),
     )
+    return harness.finalize(algo, *out)

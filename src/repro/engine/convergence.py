@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -13,6 +14,18 @@ class RunResult:
     rounds counts *full passes over the edge set* (one synchronous round or
     one asynchronous sweep both count 1), which is the unit the paper plots
     in Fig. 6 — it makes sync and async modes directly comparable.
+
+    Batched (d > 1) runs set ``x`` to the (n, d) state matrix and fill the
+    per-column fields: ``col_rounds[j]`` is the round at which query j first
+    met eps (columns freeze there, so each query gets exactly its scalar
+    round count), ``col_converged[j]`` whether it did within the budget.
+    ``rounds`` is then the number of rounds the batch executed =
+    ``max(col_rounds)``. Scalar (d = 1) runs keep the legacy contract:
+    ``x`` is 1-D and the per-column fields have length 1.
+
+    Exception: ``run_priority_block`` schedules work-proportionally, so it
+    has no per-query round counts — it fills ``col_converged`` (aggregate
+    verdict, valid for every column) but leaves ``col_rounds`` None.
     """
 
     x: np.ndarray
@@ -20,6 +33,13 @@ class RunResult:
     converged: bool
     residuals: np.ndarray  # per-round residual trace
     state_sums: np.ndarray  # per-round sum(x) (for Fig. 7 convergence plots)
+    col_rounds: Optional[np.ndarray] = None    # int32[d]
+    col_converged: Optional[np.ndarray] = None  # bool[d]
+
+    @property
+    def d(self) -> int:
+        """Number of batched queries in this result."""
+        return int(self.x.shape[1]) if self.x.ndim == 2 else 1
 
     def distance_trace(self, x_star_sum: float) -> np.ndarray:
         """dist_t = |sum x* - sum x_t| (paper §V-C)."""

@@ -25,10 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import make_mesh, pvary, set_mesh, shard_map
+
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.engine import harness
 from repro.engine import jax_ops as J
-from repro.engine.async_block import _pack
 
 
 def _pad_blocks(arr: np.ndarray, nb_target: int, fill) -> np.ndarray:
@@ -57,7 +59,7 @@ def make_superstep(
             dev = jax.lax.axis_index(axis_name)
             # the carry becomes device-varying after the first block update;
             # mark the replicated input as varying up-front
-            x_full = jax.lax.pvary(x_full, (axis_name,))
+            x_full = pvary(x_full, (axis_name,))
 
             def block_update(j, x_work):
                 gi = dev * nb_local + j  # global block id
@@ -78,12 +80,13 @@ def make_superstep(
             dev0 = dev * nb_local * bs
             return jax.lax.dynamic_slice(x_work, (dev0,), (nb_local * bs,))
 
-        return jax.shard_map(
+        return shard_map(
             inner_fn,
-            mesh=mesh,
-            in_specs=(P(None), P(axis_name), P(axis_name), P(axis_name),
-                      P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
-            out_specs=P(axis_name),
+            mesh,
+            (P(None), P(axis_name), P(axis_name), P(axis_name),
+             P(axis_name), P(axis_name), P(axis_name), P(axis_name)),
+            P(axis_name),
+            check_vma=False,
         )(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk)
 
     return superstep, nb_local
@@ -98,13 +101,16 @@ def run_distributed(
     inner: int = 1,
 ) -> RunResult:
     if mesh is None:
-        ndev = len(jax.devices())
-        mesh = jax.make_mesh(
-            (ndev,), (axis,), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh((len(jax.devices()),), (axis,))
     ndev = mesh.shape[axis]
 
-    be, x0, c, fixed, npad = _pack(algo, bs)
+    if algo.d != 1:
+        raise NotImplementedError(
+            "run_distributed is single-query for now; use run_sync/"
+            "run_async_block for batched (d > 1) states"
+        )
+    be, x0, c, fixed, npad = harness.pack(algo, bs)
+    x0, c, fixed = x0[:, 0], c[:, 0], fixed[:, 0]
     nb = ((be.nb + ndev - 1) // ndev) * ndev
     esrc = _pad_blocks(be.esrc, nb, 0)
     edst = _pad_blocks(be.edst, nb, 0)
@@ -118,7 +124,7 @@ def run_distributed(
         return out
 
     x0 = padv(x0, algo.semiring.identity)
-    c = padv(c, 0.0)
+    c = padv(c, algo.c_pad_fill)
     fx = np.ones(npad2, bool)
     fx[: npad] = fixed
     c_blk = c.reshape(nb, bs)
@@ -138,37 +144,22 @@ def run_distributed(
 
     @partial(jax.jit, static_argnames=("max_iters",))
     def _run(x0v, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk, real_mask, max_iters: int):
-        res_buf = jnp.zeros((max_iters,), jnp.float32)
-        sum_buf = jnp.zeros((max_iters,), jnp.float32)
+        # the shard_map superstep is written over 1-D state vectors; lift it
+        # to the (N, 1) batched contract of the shared round driver
+        def round_fn(x2d):
+            x_new = superstep(x2d[:, 0], esrc, edst, ew, emask, c_blk,
+                              fixed_blk, x0_blk)
+            return x_new[:, None]
 
-        def cond(state):
-            _, k, res, _, _ = state
-            return jnp.logical_and(k < max_iters, res > eps)
+        return harness.loop(
+            round_fn, x0v[:, None], res_kind=res_kind, eps=eps,
+            max_iters=max_iters, real_mask=real_mask,
+        )
 
-        def body(state):
-            x, k, _, res_buf, sum_buf = state
-            x_new = superstep(x, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk)
-            res = J.residual(res_kind, jnp.where(real_mask, x_new, 0), jnp.where(real_mask, x, 0))
-            res_buf = res_buf.at[k].set(res)
-            sum_buf = sum_buf.at[k].set(
-                jnp.sum(jnp.where(real_mask & (jnp.abs(x_new) < 1e30), x_new, 0.0))
-            )
-            return x_new, k + 1, res, res_buf, sum_buf
-
-        init = (x0v, jnp.int32(0), jnp.float32(jnp.inf), res_buf, sum_buf)
-        return jax.lax.while_loop(cond, body, init)
-
-    with jax.set_mesh(mesh):
-        x, k, res, res_buf, sum_buf = _run(
+    with set_mesh(mesh):
+        out = _run(
             jnp.asarray(x0), jnp.asarray(esrc), jnp.asarray(edst), jnp.asarray(ew),
             jnp.asarray(emask), jnp.asarray(c_blk), jnp.asarray(fixed_blk),
             jnp.asarray(x0_blk), jnp.asarray(real_mask), max_iters=max_iters,
         )
-    k = int(k)
-    return RunResult(
-        x=np.asarray(x)[: algo.n],
-        rounds=k,
-        converged=bool(res <= algo.eps),
-        residuals=np.asarray(res_buf)[:k],
-        state_sums=np.asarray(sum_buf)[:k],
-    )
+    return harness.finalize(algo, *out)

@@ -1,0 +1,151 @@
+"""Shared packed-run harness for the iterative engines.
+
+Every engine in this package is the same machine with a different sweep:
+pack the algorithm's vertex arrays into whole blocks, then drive rounds of
+``x -> sweep(x)`` until the residual drops below eps. This module holds the
+two shared halves so the engines only contribute their sweep:
+
+* :func:`pack` — the one block-padding path (previously duplicated between
+  ``async_block`` and ``distributed`` with *inconsistent* padding fills for
+  ``c``: min/max-semiring pads must be the reduce identity, not 0.0).
+
+* :func:`loop` — the one round driver (previously three near-identical
+  ``lax.while_loop`` bodies in sync / async_block / distributed). States are
+  batched ``(n, d)`` matrices; convergence is tracked *per column*: a column
+  whose residual first drops to eps is frozen (later sweeps cannot move it)
+  and recorded at its own round count, so query j of a batched run finishes
+  with exactly the state and round count of a scalar run of query j.
+
+``loop`` is a plain traced function, not a jit boundary — each engine calls
+it inside its own module-level ``jax.jit`` wrapper so compilation caching
+keys on the engine's static config exactly as before.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.algorithms import AlgoInstance
+from repro.engine.convergence import RunResult
+from repro.engine import jax_ops as J
+from repro.graphs.blocked import pack_in_edges, pad_state, padded_n
+from repro.graphs.graph import Graph
+
+
+def pack(algo: AlgoInstance, bs: int):
+    """Pad the algorithm's (n, d) vertex arrays up to whole blocks of ``bs``.
+
+    Returns ``(be, x0, c, fixed, npad)`` with f32[npad, d] state arrays.
+    Padding rows are pinned (``fixed = True``) at the reduce identity so they
+    can never influence a real vertex; ``c`` pads use the reduce identity
+    except under ``replace`` combine, whose additive pad must be 0.0.
+    """
+    g = Graph(algo.n, algo.src, algo.dst, algo.w)
+    be = pack_in_edges(g, bs)
+    npad = padded_n(algo.n, bs)
+    ident = algo.semiring.identity
+    x0 = pad_state(algo.x0, bs, fill=ident)
+    c = pad_state(algo.c, bs, fill=algo.c_pad_fill)
+    fixed = pad_state(algo.fixed, bs, fill=True)
+    return be, x0, c, fixed, npad
+
+
+def init_state(
+    x0_packed: np.ndarray, x_init, n: int
+) -> np.ndarray:
+    """Overlay a resume state onto the packed x0 (checkpointed macro-steps).
+
+    ``x_init`` may be (n,), (n, 1) or (n, d) — 1-D resumes of a d = 1 run and
+    full-matrix resumes of a batched run both work.
+    """
+    if x_init is None:
+        return x0_packed
+    x = np.asarray(x_init, dtype=x0_packed.dtype)
+    if x.size % n:
+        raise ValueError(
+            f"x_init has {x.shape} elements, expected (n, d) rows for n={n}"
+        )
+    x = x.reshape(n, -1)
+    if x.shape[1] != x0_packed.shape[1]:
+        raise ValueError(
+            f"x_init has {x.shape[1]} columns, run has {x0_packed.shape[1]}"
+        )
+    out = x0_packed.copy()
+    out[:n, :] = x
+    return out
+
+
+def loop(
+    round_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x0: jnp.ndarray,
+    *,
+    res_kind: str,
+    eps: float,
+    max_iters: int,
+    real_mask: Optional[jnp.ndarray] = None,
+):
+    """Drive ``x -> round_fn(x)`` with per-column convergence freezing.
+
+    x0: f32[N, d]. ``real_mask`` (bool[N]) masks padding rows out of the
+    residual and the state-sum trace. Returns
+    ``(x, k, col_done, col_rounds, res_buf, sum_buf)`` where ``res_buf[t]``
+    is the max residual over the columns still active at round t (for d = 1
+    this is the legacy scalar residual trace).
+    """
+    d = x0.shape[1]
+    res_buf = jnp.zeros((max_iters,), jnp.float32)
+    sum_buf = jnp.zeros((max_iters,), jnp.float32)
+
+    def mask_rows(x):
+        if real_mask is None:
+            return x
+        return jnp.where(real_mask[:, None], x, 0.0)
+
+    def cond(state):
+        _, k, col_done, _, _, _ = state
+        return jnp.logical_and(k < max_iters, ~jnp.all(col_done))
+
+    def body(state):
+        x, k, col_done, col_rounds, res_buf, sum_buf = state
+        x_cand = round_fn(x)
+        res_col = J.residual_cols(res_kind, mask_rows(x_cand), mask_rows(x))
+        active = ~col_done
+        # frozen columns keep their converged state; active ones advance
+        x_new = jnp.where(active[None, :], x_cand, x)
+        col_rounds = col_rounds + active.astype(jnp.int32)
+        col_done = col_done | (res_col <= eps)
+        res_buf = res_buf.at[k].set(jnp.max(jnp.where(active, res_col, 0.0)))
+        xm = mask_rows(x_new)
+        sum_buf = sum_buf.at[k].set(
+            jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0))
+        )
+        return x_new, k + 1, col_done, col_rounds, res_buf, sum_buf
+
+    init = (
+        x0, jnp.int32(0), jnp.zeros((d,), bool), jnp.zeros((d,), jnp.int32),
+        res_buf, sum_buf,
+    )
+    return jax.lax.while_loop(cond, body, init)
+
+
+def finalize(
+    algo: AlgoInstance, x, k, col_done, col_rounds, res_buf, sum_buf
+) -> RunResult:
+    """Convert raw loop outputs into a RunResult (d = 1 keeps 1-D x)."""
+    k = int(k)
+    xr = np.asarray(x)[: algo.n]
+    if algo.d == 1:
+        xr = xr[:, 0]
+    col_conv = np.asarray(col_done)
+    return RunResult(
+        x=xr,
+        rounds=k,
+        converged=bool(col_conv.all()),
+        residuals=np.asarray(res_buf)[:k],
+        state_sums=np.asarray(sum_buf)[:k],
+        col_rounds=np.asarray(col_rounds),
+        col_converged=col_conv,
+    )

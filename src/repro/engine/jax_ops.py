@@ -1,13 +1,25 @@
-"""Shared jittable primitives for the iterative engines."""
+"""Shared jittable primitives for the iterative engines.
+
+All state-carrying operands are batched ``(n, d)`` matrices (column j =
+query j); per-edge operands (``w``, masks) stay 1-D and broadcast across the
+batch dimension. ``d = 1`` reproduces the scalar engines bit-for-bit.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.engine.algorithms import AlgoInstance, Semiring
+from repro.engine.algorithms import AlgoInstance
+
+
+def _bcast_edge(a: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Lift a per-edge 1-D array to broadcast against (e, d) messages."""
+    if like.ndim == a.ndim + 1:
+        return a[..., None]
+    return a
 
 
 def edge_op(kind: str, x_src: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    w = _bcast_edge(w, x_src)
     if kind == "mul":
         return x_src * w
     if kind == "add":
@@ -20,7 +32,7 @@ def edge_op(kind: str, x_src: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 def segment_reduce(
     kind: str, msgs: jnp.ndarray, dst: jnp.ndarray, n: int, identity: float
 ) -> jnp.ndarray:
-    out = jnp.full((n,), identity, dtype=msgs.dtype)
+    out = jnp.full((n,) + msgs.shape[1:], identity, dtype=msgs.dtype)
     if kind == "sum":
         return out.at[dst].add(msgs)
     if kind == "min":
@@ -46,12 +58,26 @@ def combine(
 
 
 def residual(kind: str, x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
+    """Scalar residual over the whole state (all columns together)."""
     if kind == "linf":
         return jnp.max(jnp.abs(x_new - x_old))
     if kind == "l1":
         return jnp.sum(jnp.abs(x_new - x_old))
     if kind == "changed":
         return jnp.sum((x_new != x_old).astype(jnp.float32))
+    raise ValueError(kind)
+
+
+def residual_cols(kind: str, x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
+    """Per-column residual f32[d] for (n, d) states — the convergence unit of
+    the batched engines: a column (query) that drops below eps is frozen and
+    stops contributing to the stopping test."""
+    if kind == "linf":
+        return jnp.max(jnp.abs(x_new - x_old), axis=0)
+    if kind == "l1":
+        return jnp.sum(jnp.abs(x_new - x_old), axis=0)
+    if kind == "changed":
+        return jnp.sum((x_new != x_old).astype(jnp.float32), axis=0)
     raise ValueError(kind)
 
 

@@ -11,6 +11,12 @@ every dependent block j (one with edges i -> j) inherits priority mass
 ``D[j, i] * |delta_i|``, where D is the dense block-adjacency indicator —
 an (nb x nb) matmul per round, negligible next to the block updates.
 
+States are batched ``f32[n, d]`` like the other engines (shared pack path in
+`engine.harness`); a block's priority is its state motion summed over all d
+query columns, so the scheduler chases whichever query still has work left.
+The round driver stays bespoke — priority rounds touch k blocks, not the
+whole edge set, so the shared full-sweep driver does not apply.
+
 Work is measured in *block updates*; a full sweep costs nb. The benchmark
 (`benchmarks/priority_sched.py`) shows priority scheduling reaches the same
 fixpoint in a fraction of the edge-work of full sweeps, and composes with
@@ -27,9 +33,8 @@ import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.engine import harness
 from repro.engine import jax_ops as J
-from repro.engine.async_block import _pack
-from repro.graphs.graph import Graph
 
 
 def _block_dependency(algo: AlgoInstance, bs: int, nb: int) -> np.ndarray:
@@ -52,20 +57,20 @@ def _run(
     sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
     eps: float, max_rounds: int, identity: float,
 ):
-    c_blk = c.reshape(nb, bs)
-    fixed_blk = fixed.reshape(nb, bs)
-    x0_blk = x0.reshape(nb, bs)
-    real_mask = (jnp.arange(nb * bs) < n_real)
+    d = x0.shape[1]
+    c_blk = c.reshape(nb, bs, d)
+    fixed_blk = fixed.reshape(nb, bs, d)
+    x0_blk = x0.reshape(nb, bs, d)
 
     def block_update(i, x):
         msgs = J.edge_op(sem_edge, x[esrc[i]], ew[i])
-        msgs = jnp.where(emask[i], msgs, identity)
+        msgs = jnp.where(emask[i][:, None], msgs, identity)
         agg = J.segment_reduce(sem_reduce, msgs, edst[i], bs, identity)
-        old = jax.lax.dynamic_slice(x, (i * bs,), (bs,))
+        old = jax.lax.dynamic_slice(x, (i * bs, 0), (bs, d))
         new = J.combine(comb, agg, c_blk[i], old, fixed_blk[i], x0_blk[i])
         delta = jnp.sum(jnp.abs(jnp.where(jnp.abs(new) < 1e30, new, 0)
                                 - jnp.where(jnp.abs(old) < 1e30, old, 0)))
-        return jax.lax.dynamic_update_slice(x, new, (i * bs,)), delta
+        return jax.lax.dynamic_update_slice(x, new, (i * bs, 0)), delta
 
     def round_fn(state):
         x, prio, k, res, tot_updates = state
@@ -74,8 +79,8 @@ def _run(
         def body(t, carry):
             x, deltas = carry
             i = sel[t]
-            x, d = block_update(i, x)
-            return x, deltas.at[t].set(d)
+            x, dlt = block_update(i, x)
+            return x, deltas.at[t].set(dlt)
 
         x_new, deltas = jax.lax.fori_loop(
             0, k_sel, body, (x, jnp.zeros((k_sel,), jnp.float32))
@@ -105,13 +110,21 @@ def run_priority_block(
 ) -> RunResult:
     """Returns a RunResult whose `rounds` is *equivalent full sweeps*
     (total block updates / nb) — directly comparable to the other engines'
-    round counts in work terms."""
-    be, x0, c, fixed, npad = _pack(algo, bs)
+    round counts in work terms.
+
+    Per-column bookkeeping: the scheduler stops on the *total* priority mass
+    across all d columns, which bounds every column's mass, so
+    ``col_converged`` is filled (all columns share the aggregate verdict).
+    ``col_rounds`` stays None — work-proportional scheduling has no
+    per-query round count."""
+    be, x0, c, fixed, npad = harness.pack(algo, bs)
     nb = be.nb
     k_sel = max(1, int(round(nb * select_frac)))
     dep = _block_dependency(algo, bs, nb)
     # priority scheduling needs an accumulated-change signal; for "changed"
-    # algorithms (SSSP/BFS/CC) the L1 delta works identically
+    # algorithms (SSSP/BFS/CC) the L1 delta works identically. The threshold
+    # is NOT scaled by d: total mass <= eps bounds every column's mass, so a
+    # batched run is at least as converged per query as a scalar run.
     eps = algo.eps if algo.residual != "linf" else algo.eps * max(1, algo.n) * 0.01
     x, k, res, tot = _run(
         jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
@@ -124,11 +137,15 @@ def run_priority_block(
         identity=algo.semiring.identity,
     )
     xr = np.asarray(x)[: algo.n]
+    if algo.d == 1:
+        xr = xr[:, 0]
     finite = xr[np.abs(xr) < 1e30]
+    converged = bool(res <= eps)
     return RunResult(
         x=xr,
         rounds=float(tot) / nb,
-        converged=bool(res <= eps),
+        converged=converged,
         residuals=np.asarray([float(res)]),
         state_sums=np.asarray([float(finite.sum()) if len(finite) else 0.0]),
+        col_converged=np.full((algo.d,), converged),
     )

@@ -1,19 +1,23 @@
 """Synchronous (Jacobi) engine — paper Eq. 1.
 
 Every round recomputes all vertices from the *previous* round's states:
-one full segment-reduce over the edge set inside a ``lax.while_loop``.
-This is the paper's "Sync" baseline mode.
+one full segment-reduce over the edge set inside the shared round driver
+(`engine.harness.loop`). This is the paper's "Sync" baseline mode.
+
+States are batched ``f32[n, d]`` (column j = independent query j, e.g. one
+personalized-PageRank seed); convergence is per column — a converged column
+freezes and stops contributing to the residual, so each query reports its
+own round count. ``d = 1`` is the scalar mode and matches the paper's runs.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.engine import harness
 from repro.engine import jax_ops as J
 
 
@@ -23,34 +27,19 @@ def _run(
     n: int, sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
     eps: float, max_iters: int, identity: float,
 ):
-    res_buf = jnp.zeros((max_iters,), jnp.float32)
-    sum_buf = jnp.zeros((max_iters,), jnp.float32)
-
     def round_fn(x):
         msgs = J.edge_op(sem_edge, x[src], w)
         agg = J.segment_reduce(sem_reduce, msgs, dst, n, identity)
         return J.combine(comb, agg, c, x, fixed, x0)
 
-    def cond(state):
-        _, k, res, _, _ = state
-        return jnp.logical_and(k < max_iters, res > eps)
-
-    def body(state):
-        x, k, _, res_buf, sum_buf = state
-        x_new = round_fn(x)
-        res = J.residual(res_kind, x_new, x)
-        res_buf = res_buf.at[k].set(res)
-        sum_buf = sum_buf.at[k].set(jnp.sum(jnp.where(jnp.abs(x_new) < 1e30, x_new, 0.0)))
-        return x_new, k + 1, res, res_buf, sum_buf
-
-    init = (x0, jnp.int32(0), jnp.float32(jnp.inf), res_buf, sum_buf)
-    x, k, res, res_buf, sum_buf = jax.lax.while_loop(cond, body, init)
-    return x, k, res, res_buf, sum_buf
+    return harness.loop(
+        round_fn, x0, res_kind=res_kind, eps=eps, max_iters=max_iters
+    )
 
 
 def run_sync(algo: AlgoInstance, max_iters: int = 2000) -> RunResult:
     arrs = J.device_arrays(algo)
-    x, k, res, res_buf, sum_buf = _run(
+    out = _run(
         arrs["src"], arrs["dst"], arrs["w"], arrs["x0"], arrs["c"], arrs["fixed"],
         n=algo.n,
         sem_reduce=algo.semiring.reduce,
@@ -61,11 +50,4 @@ def run_sync(algo: AlgoInstance, max_iters: int = 2000) -> RunResult:
         max_iters=max_iters,
         identity=algo.semiring.identity,
     )
-    k = int(k)
-    return RunResult(
-        x=np.asarray(x),
-        rounds=k,
-        converged=bool(res <= algo.eps),
-        residuals=np.asarray(res_buf)[:k],
-        state_sums=np.asarray(sum_buf)[:k],
-    )
+    return harness.finalize(algo, *out)

@@ -155,11 +155,18 @@ def pack_bsr(g: Graph, bs: int, fill: float = 0.0) -> BSRMatrix:
     return BSRMatrix(bs=bs, n=g.n, cols=cols, colmask=colmask, tiles=tiles, fill=fill)
 
 
-def pad_state(x: np.ndarray, bs: int, fill: float = 0.0) -> np.ndarray:
-    """Pad a per-vertex state array (n, ...) up to a whole number of blocks."""
+def pad_state(x: np.ndarray, bs: int, fill=0.0) -> np.ndarray:
+    """Pad a per-vertex state array (n, ...) up to a whole number of blocks.
+
+    This is the one padding primitive of the shared pack path
+    (`engine.harness.pack`): batched (n, d) state matrices pad along axis 0
+    only, and ``fill`` must be the semiring-appropriate value — the reduce
+    identity for states, the combine-appropriate fill for constants, ``True``
+    for ``fixed`` masks (padding vertices are pinned so they never move).
+    """
     n = x.shape[0]
     np_ = padded_n(n, bs)
     if np_ == n:
-        return x
+        return x.copy()
     pad_width = [(0, np_ - n)] + [(0, 0)] * (x.ndim - 1)
     return np.pad(x, pad_width, constant_values=fill)

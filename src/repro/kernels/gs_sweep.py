@@ -104,6 +104,11 @@ def gs_sweep_pallas(
     nb, k_max = cols.shape
     n, d = x.shape
     assert n == nb * bs
+    # the batched engine (run_async_block(backend="pallas")) feeds real
+    # multi-query columns here; all per-vertex operands must carry them
+    assert c.shape == x0.shape == fixed.shape == (n, d), (
+        c.shape, x0.shape, fixed.shape, (n, d)
+    )
     kernel = _make_kernel(semiring, combine, k_max, bs)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

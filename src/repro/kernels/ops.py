@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.engine.algorithms import AlgoInstance, BIG
 from repro.engine.convergence import RunResult
-from repro.graphs.blocked import pack_bsr, padded_n
+from repro.graphs.blocked import pack_bsr, pad_state, padded_n
 from repro.graphs.graph import Graph
 from repro.kernels.bsr_spmm import bsr_spmm_pallas
 from repro.kernels.gs_sweep import gs_sweep_pallas
@@ -54,11 +54,13 @@ def gs_sweep(cols, tiles, c, x0, fixed, x, *, semiring="plus_times",
 # AlgoInstance -> kernel operands
 # ---------------------------------------------------------------------------
 
-def pack_algorithm(algo: AlgoInstance, bs: int, d: int = 1) -> dict:
+def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
     """Pack an algorithm's graph + vectors into BSR kernel operands.
 
-    The state is (n_padded, d); scalar algorithms use d=1 (interpret mode) —
-    on a real TPU you'd batch d>=128 sources per sweep to fill the lanes.
+    The state is (n_padded, d). ``d`` defaults to the algorithm's own batch
+    width ``algo.d`` (batched constructors carry real per-column vectors); a
+    larger ``d`` broadcasts a scalar (``algo.d == 1``) instance across the
+    batch — the kernel-bench path for filling TPU lanes with copies.
     """
     semiring = "plus_times" if algo.semiring.reduce == "sum" else "min_plus"
     if algo.semiring.reduce == "max":
@@ -67,22 +69,25 @@ def pack_algorithm(algo: AlgoInstance, bs: int, d: int = 1) -> dict:
     g = Graph(algo.n, algo.src, algo.dst, algo.w)
     bsr = pack_bsr(g, bs, fill=fill)
     npad = padded_n(algo.n, bs)
+    d = algo.d if d is None else d
+    if d != algo.d and algo.d != 1:
+        raise ValueError(f"cannot broadcast a d={algo.d} instance to d={d}")
 
-    def padv(a, fillv):
-        out = np.full((npad,), fillv, dtype=np.float32)
-        out[: algo.n] = a
-        return np.repeat(out[:, None], d, axis=1)
+    # same padding primitive + fill rules as engine.harness.pack
+    def padm(a, fillv):
+        out = pad_state(np.asarray(a, np.float32), bs, fill=fillv)
+        if d != algo.d:
+            out = np.repeat(out, d, axis=1)
+        return out
 
-    fixed = np.zeros(npad, np.float32)
-    fixed[: algo.n] = algo.fixed.astype(np.float32)
-    fixed[algo.n:] = 1.0  # pads pinned
-    x0pad = padv(algo.x0, algo.semiring.identity)
+    ident = algo.semiring.identity
+    x0pad = padm(algo.x0, ident)
     return {
         "cols": jnp.asarray(bsr.cols),
         "tiles": jnp.asarray(bsr.tiles),
-        "c": jnp.asarray(padv(algo.c, 0.0)),
+        "c": jnp.asarray(padm(algo.c, algo.c_pad_fill)),
         "x0": jnp.asarray(x0pad),
-        "fixed": jnp.asarray(np.repeat(fixed[:, None], d, axis=1)),
+        "fixed": jnp.asarray(padm(algo.fixed, 1.0)),  # pads pinned
         "x": jnp.asarray(x0pad.copy()),
         "semiring": semiring,
         "combine": algo.combine,
@@ -97,40 +102,12 @@ def run_async_block_pallas(
 ) -> RunResult:
     """Async engine with the fused gs_sweep kernel doing each sweep.
 
-    The convergence loop stays at the JAX level (python loop; each sweep is
-    one device call) — interpret mode is slow, so benchmarks use modest
-    sizes; on TPU each sweep is a single kernel launch.
+    Back-compat shim: the convergence loop now lives in the engine layer —
+    this is ``run_async_block(algo, backend="pallas")`` with an explicit
+    interpret override.
     """
-    ops = pack_algorithm(algo, bs)
-    x = ops["x"]
-    if x_init is not None:
-        x = x.at[: algo.n, 0].set(jnp.asarray(x_init))
-    residuals, sums = [], []
-    k = 0
-    converged = False
-    for k in range(1, max_iters + 1):
-        x_new = gs_sweep(
-            ops["cols"], ops["tiles"], ops["c"], ops["x0"], ops["fixed"], x,
-            semiring=ops["semiring"], combine=ops["combine"], interpret=interpret,
-        )
-        xo = np.asarray(x_new)[: algo.n, 0]
-        xprev = np.asarray(x)[: algo.n, 0]
-        if algo.residual == "changed":
-            res = float(np.sum(xo != xprev))
-        elif algo.residual == "l1":
-            res = float(np.sum(np.abs(xo - xprev)))
-        else:
-            res = float(np.max(np.abs(xo - xprev)))
-        residuals.append(res)
-        sums.append(float(np.sum(xo[np.abs(xo) < 1e30])))
-        x = x_new
-        if res <= algo.eps:
-            converged = True
-            break
-    return RunResult(
-        x=np.asarray(x)[: algo.n, 0],
-        rounds=k,
-        converged=converged,
-        residuals=np.asarray(residuals),
-        state_sums=np.asarray(sums),
+    from repro.engine.async_block import _run_async_block_pallas
+
+    return _run_async_block_pallas(
+        algo, bs, max_iters, 1, x_init, interpret=interpret
     )

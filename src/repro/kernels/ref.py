@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.engine.algorithms import BIG
 
 
 def ref_bsr_spmm(

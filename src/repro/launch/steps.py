@@ -16,9 +16,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.shapes import SHAPES, WHISPER_ENC_FRAMES, ShapeCell
-from repro.models.model import Model, ModelConfig, build_model
+from repro.models.model import ModelConfig, build_model
 from repro.sharding.rules import (
-    ShardingRules, batch_axes_for_mesh, build_param_specs, spec_for_axes,
+    ShardingRules, batch_axes_for_mesh, build_param_specs,
 )
 from repro.train import optim
 from repro.train.loop import TrainConfig, make_train_step

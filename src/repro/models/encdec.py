@@ -8,7 +8,6 @@ causal self-attention + cross-attention over the encoder output + MLP.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,77 @@
+"""Version bridge to the jax >= 0.6 sharding API.
+
+The production stack is written against the modern surface — ``jax.set_mesh``
+(current-mesh context), ``jax.shard_map`` (with ``axis_names`` /
+``check_vma``), ``jax.make_mesh(..., axis_types=...)``, ``jax.lax.pvary`` —
+but CI and the pinned container run the 0.4.x line, where those live under
+different names with slightly different knobs:
+
+    new (>= 0.6)                       old (0.4.x)
+    ------------------------------     ----------------------------------
+    jax.set_mesh(mesh)                 with mesh:  (Mesh context manager)
+    jax.shard_map(axis_names=S)        shard_map(auto=all_axes - S)
+    jax.shard_map(check_vma=False)     shard_map(check_rep=False)
+    jax.make_mesh(..., axis_types=..)  jax.make_mesh(shape, names)
+    jax.lax.pvary(x, axes)             (no-op: no varying-axis tracking)
+
+Import these wrappers instead of the jax names anywhere a mesh is built or a
+shard_map is issued; they are pass-throughs on new jax.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def make_mesh(shape, axis_names, *, explicit: bool = False):
+    """jax.make_mesh with Auto axis_types where supported, plain otherwise."""
+    if not hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    kind = (jax.sharding.AxisType.Explicit if explicit
+            else jax.sharding.AxisType.Auto)
+    return jax.make_mesh(
+        tuple(shape), tuple(axis_names), axis_types=(kind,) * len(axis_names)
+    )
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` current for implicit sharding."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # 0.4.x: Mesh is itself the resource-env context manager
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()
+
+
+def shard_map(f, mesh, in_specs, out_specs, *, axis_names=None,
+              check_vma: bool | None = None):
+    """jax.shard_map / jax.experimental.shard_map.shard_map bridge.
+
+    ``axis_names``: mesh axes the function is manual over (new-API meaning);
+    on old jax this becomes ``auto = all_axes - axis_names``.
+    ``check_vma``: new name for replication checking (old ``check_rep``).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as sm
+
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    # old check_rep cannot track device-varying carries the new API expresses
+    # with pvary; disable it whenever the caller opted out of vma checking
+    if check_vma is False:
+        kw["check_rep"] = False
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` as varying over ``axis_names`` (no-op before jax 0.5)."""
+    pv = getattr(jax.lax, "pvary", None)
+    return pv(x, tuple(axis_names)) if pv is not None else x

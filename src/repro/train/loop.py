@@ -20,19 +20,20 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.models.model import Model, abstract_params
+from repro.models.model import Model
 from repro.sharding.rules import (
-    ShardingRules, batch_axes_for_mesh, build_param_specs, spec_for_axes,
+    ShardingRules, batch_axes_for_mesh, build_param_specs,
 )
 from repro.train import optim
-from repro.train.grad_compress import compressed_psum_tree, init_error_tree
+from repro.train.grad_compress import compressed_psum_tree
+from repro.runtime.jax_compat import set_mesh as compat_set_mesh, shard_map as compat_shard_map
 
 
 @dataclasses.dataclass
@@ -200,9 +201,9 @@ def make_train_step(
                 )
                 return new_params, new_opt, err, {"loss": loss, **om}
 
-            return jax.shard_map(
+            return compat_shard_map(
                 inner,
-                mesh=mesh,
+                mesh,
                 in_specs=(P(), P(), P(), batch_spec),
                 out_specs=(P(), P(), P(), P()),
                 axis_names=set(dp_axes),
@@ -228,7 +229,7 @@ def init_train_state(model: Model, mesh, shardings, seed: int = 0):
     def _init(key):
         return model.init(key)
 
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         params = _init(jax.random.PRNGKey(seed))
         opt_state = jax.jit(
             optim.init_opt_state, out_shardings=shardings["opt"]
@@ -246,7 +247,7 @@ def train_loop(
     if params is None:
         params, opt_state = init_train_state(model, mesh, shardings)
     history = []
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         for step in range(start_step, steps):
             t0 = time.perf_counter()
             batch = dataset(step)

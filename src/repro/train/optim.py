@@ -8,7 +8,6 @@ pair — the standard optimizer-state partitioning.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,6 @@ def lr_at(cfg: AdamWConfig, step):
 
 def init_opt_state(params):
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    import copy
     return {
         "m": zeros,
         "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),

@@ -1,0 +1,103 @@
+"""Deterministic mini-implementation of the `hypothesis` API surface the
+test-suite uses (given / settings / strategies.{integers,floats,sampled_from,
+composite}).
+
+conftest.py installs this as ``sys.modules["hypothesis"]`` ONLY when the real
+package is missing (the hermetic tier-1 environment cannot pip-install). CI
+installs real hypothesis via ``pip install -e .[test]`` and never sees this
+file. Examples are drawn from a per-test seeded PRNG, so runs are
+reproducible; there is no shrinking and no database — this is a fallback, not
+a replacement.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value)
+
+
+def _composite(fn):
+    @functools.wraps(fn)
+    def build(*args, **kw):
+        def sample(rng):
+            return fn(lambda strat: strat.example_from(rng), *args, **kw)
+
+        return _Strategy(sample)
+
+    return build
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(test_fn):
+        @functools.wraps(test_fn)
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", 10)
+            rng = random.Random(f"{test_fn.__module__}.{test_fn.__qualname__}")
+            for _ in range(n):
+                args = [s.example_from(rng) for s in strategies]
+                kw = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                test_fn(*args, **kw)
+
+        # pytest resolves fixtures from inspect.signature, which follows
+        # __wrapped__ — drop it so the drawn parameters aren't mistaken for
+        # fixture requests (real hypothesis does the same signature rewrite)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+strategies.just = _just
+strategies.composite = _composite
+
+HealthCheck = types.SimpleNamespace(
+    too_slow="too_slow", data_too_large="data_too_large",
+    filter_too_much="filter_too_much",
+)
+
+
+def assume(condition) -> bool:
+    """Stub assume: silently accept (no example rejection machinery)."""
+    return bool(condition)

@@ -1,0 +1,149 @@
+"""Batched multi-query execution semantics (f32[n, d] states).
+
+The contract: a batched d-column run IS d independent scalar runs — same
+final states column-for-column (bitwise on CPU: the per-round ops are
+identical elementwise programs) and same per-query round counts (per-column
+convergence freezing). Plus the shared pack path's padding-fill regression.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import (
+    get_algorithm,
+    multi_source_sssp,
+    personalized_pagerank,
+    run_async_block,
+    run_sync,
+)
+from repro.engine import harness
+from repro.engine.priority import run_priority_block
+from repro.graphs import generators as gen
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.scrambled(gen.powerlaw_cluster(900, 4, seed=1), seed=9)
+
+
+@pytest.fixture(scope="module")
+def wgraph(graph):
+    return gen.with_random_weights(graph, seed=2)
+
+
+SEEDS = [0, 5, 17, 100, 33, 7, 250, 512]
+
+
+@pytest.mark.parametrize("runner", [
+    pytest.param(lambda a: run_sync(a), id="sync"),
+    pytest.param(lambda a: run_async_block(a, bs=128), id="async_block"),
+])
+def test_batched_ppr_equals_scalar_columns(graph, runner):
+    """d=8 batched PPR == 8 scalar runs, bitwise per column, with matching
+    per-column round counts."""
+    rb = runner(personalized_pagerank(graph, SEEDS))
+    assert rb.x.shape == (graph.n, len(SEEDS))
+    assert rb.converged and bool(rb.col_converged.all())
+    for j, s in enumerate(SEEDS):
+        rs = runner(personalized_pagerank(graph, [s]))
+        assert rs.x.shape == (graph.n,)
+        np.testing.assert_array_equal(
+            rb.x[:, j], rs.x,
+            err_msg=f"column {j} (seed {s}) differs from its scalar run",
+        )
+        assert int(rb.col_rounds[j]) == rs.rounds, (
+            f"column {j}: batched rounds {int(rb.col_rounds[j])} != "
+            f"scalar rounds {rs.rounds}"
+        )
+    # the batch executes exactly as long as its slowest query
+    assert rb.rounds == int(rb.col_rounds.max())
+
+
+def test_batched_ppr_matches_exact(graph):
+    algo = personalized_pagerank(graph, SEEDS)
+    r = run_async_block(algo, bs=128)
+    np.testing.assert_allclose(r.x, algo.exact(), atol=2e-5, rtol=1e-4)
+
+
+def test_multi_source_sssp_equals_scalar_sources(wgraph):
+    sources = [0, 9, 77, 300]
+    rb = run_async_block(multi_source_sssp(wgraph, sources), bs=128)
+    assert rb.converged
+    np.testing.assert_allclose(
+        rb.x, multi_source_sssp(wgraph, sources).exact(), atol=2e-5, rtol=1e-4
+    )
+    for j, s in enumerate(sources):
+        rs = run_async_block(multi_source_sssp(wgraph, [s]), bs=128)
+        np.testing.assert_array_equal(rb.x[:, j], rs.x)
+        assert int(rb.col_rounds[j]) == rs.rounds
+
+
+def test_scalar_d1_contract_unchanged(graph):
+    """d=1 keeps the legacy RunResult shape: 1-D x, scalar rounds."""
+    r = run_sync(get_algorithm("pagerank", graph))
+    assert r.x.ndim == 1 and r.d == 1
+    assert r.col_rounds.shape == (1,) and int(r.col_rounds[0]) == r.rounds
+
+
+def test_pallas_backend_parity(graph):
+    """run_async_block(backend='pallas') drives the fused gs_sweep kernel
+    through the same convergence harness as the jax backend."""
+    algo = personalized_pagerank(graph, [0, 5, 17, 99])
+    r_jax = run_async_block(algo, bs=64)
+    r_pal = run_async_block(algo, bs=64, backend="pallas", max_iters=300)
+    np.testing.assert_allclose(r_pal.x, r_jax.x, atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(r_pal.col_rounds, r_jax.col_rounds)
+
+
+def test_priority_engine_batched(graph):
+    algo = personalized_pagerank(graph, [0, 5, 17, 99])
+    r = run_priority_block(algo, bs=64)
+    assert r.converged
+    np.testing.assert_allclose(r.x, algo.exact(), atol=2e-4, rtol=1e-3)
+
+
+def test_pack_c_fill_uses_reduce_identity(wgraph):
+    """Regression: the shared pack path must pad `c` with the reduce identity
+    for min/max semirings (a 0.0 pad is an absorbing element under min —
+    under `min_old` combine it would drag padding vertices to 0 and, were a
+    padding row ever unpinned, corrupt real states)."""
+    algo = get_algorithm("sssp", wgraph)  # min semiring, combine="min_old"
+    bs = 128
+    assert algo.n % bs != 0, "fixture must exercise real padding"
+    be, x0, c, fixed, npad = harness.pack(algo, bs)
+    assert npad > algo.n
+    ident = algo.semiring.identity
+    assert np.all(c[algo.n:] == np.float32(ident))
+    assert np.all(fixed[algo.n:])
+    assert np.all(x0[algo.n:] == np.float32(ident))
+    # and "replace" (sum) algorithms keep the additive 0.0 pad
+    algo2 = get_algorithm("pagerank", wgraph)
+    _, _, c2, _, _ = harness.pack(algo2, bs)
+    assert np.all(c2[algo2.n:] == 0.0)
+
+
+def test_min_semiring_unaligned_size_end_to_end(wgraph):
+    """min-semiring graph whose size is not a multiple of bs must still hit
+    the exact fixpoint through the padded engines (both backends)."""
+    assert wgraph.n % 128 != 0
+    algo = get_algorithm("sssp", wgraph)
+    for backend in ("jax", "pallas"):
+        r = run_async_block(algo, bs=128, backend=backend, max_iters=300)
+        assert r.converged, backend
+        np.testing.assert_allclose(
+            r.x, algo.exact(), atol=2e-5, rtol=1e-4, err_msg=backend
+        )
+
+
+def test_x_init_resume_batched(graph):
+    """Macro-stepped batched runs (checkpoint/resume path) reach the same
+    fixpoint as one uninterrupted run."""
+    algo = personalized_pagerank(graph, [3, 44, 500])
+    full = run_async_block(algo, bs=128)
+    state = algo.x0
+    for _ in range(100):
+        r = run_async_block(algo, bs=128, max_iters=4, x_init=state)
+        state = r.x
+        if r.converged:
+            break
+    assert r.converged
+    np.testing.assert_allclose(state, full.x, atol=1e-5, rtol=1e-5)

@@ -1,9 +1,8 @@
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.graphs import generators as gen
-from repro.graphs.graph import Graph, order_to_rank
+from repro.graphs.graph import order_to_rank
 from repro.graphs.blocked import pack_in_edges, pack_bsr, num_blocks
 from repro.graphs import io as gio
 

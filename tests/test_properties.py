@@ -1,13 +1,11 @@
 """Cross-cutting property tests (hypothesis) for the system's invariants."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metric, baselines
 from repro.core.gograph import gograph_order
 from repro.engine import get_algorithm, run_sync
 from repro.graphs import generators as gen
-from repro.graphs.graph import Graph
 
 
 @st.composite
