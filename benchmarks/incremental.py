@@ -1,0 +1,98 @@
+"""Incremental serving vs cold recompute on evolving graphs.
+
+For each workload, converge on the base graph, apply a random delta batch
+(insertions; plus a mixed churn row with deletions + reweights), then answer
+the "post-delta" query twice: cold (`run_async_block` from x0 on the mutated
+graph) and warm (`run_incremental` from the converged state). Reports rounds
+and wall-clock for both, the warm/cold round ratio, and whether the warm
+result reached the same fixpoint (within tolerance for sum semirings —
+both endpoints carry an O(eps/(1-rho)) stopping slack — bitwise for
+min/max). The headline acceptance row is the 1% insertion delta:
+warm rounds <= 50% of cold.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.engine import get_algorithm, remake, run_async_block, run_incremental
+from repro.graphs import generators as gen
+from repro.graphs.delta import random_delta
+
+GRAPH = "ic-like"
+ALGOS = ["pagerank", "php", "sssp", "bfs"]
+ADD_FRACS = [0.001, 0.01, 0.05]
+BS, INNER = 64, 2
+# both runs stop on successive-change <= eps, so each sits within
+# ~eps*rho/(1-rho) of the true fixpoint; 10*eps bounds their disagreement
+SUM_TOL_FACTOR = 10.0
+
+
+def _one(algo_old, algo_new, prior):
+    cold, us_cold = common.timed(
+        run_async_block, algo_new, bs=BS, inner=INNER
+    )
+    warm, us_warm = common.timed(
+        run_incremental, algo_new, algo_old, prior,
+        engine="async_block", bs=BS, inner=INNER,
+    )
+    if algo_new.semiring.reduce == "sum":
+        ok = bool(np.abs(warm.x - cold.x).max()
+                  <= SUM_TOL_FACTOR * algo_new.eps)
+    else:
+        ok = bool(np.array_equal(warm.x, cold.x))
+    return {
+        "cold_rounds": int(cold.rounds),
+        "warm_rounds": int(warm.rounds),
+        "ratio": warm.rounds / max(1, cold.rounds),
+        "us_cold": us_cold,
+        "us_warm": us_warm,
+        "same_fixpoint": ok,
+    }
+
+
+def run(out_dir: str):
+    graph = common.BENCH_GRAPHS[GRAPH]()
+    rows, payload = [], {}
+    for name in ALGOS:
+        g = graph if name != "sssp" else gen.with_random_weights(graph, seed=3)
+        algo_old = get_algorithm(name, g)
+        prior, _ = common.timed(run_async_block, algo_old, bs=BS, inner=INNER)
+        for frac in ADD_FRACS:
+            delta = random_delta(g, frac_add=frac, seed=17)
+            algo_new = remake(algo_old, delta.apply(g))
+            rec = _one(algo_old, algo_new, prior)
+            payload[f"{name}_add{frac}"] = rec
+            rows.append((
+                f"incr_{name}_add{frac}", rec["us_warm"],
+                f"warm={rec['warm_rounds']} cold={rec['cold_rounds']} "
+                f"ratio={rec['ratio']:.2f} ok={rec['same_fixpoint']}",
+            ))
+        # churn: deletions + reweights exercise the signed-residual (sum)
+        # and masked-regional-recompute (min/max) paths
+        delta = random_delta(g, frac_add=0.005, frac_del=0.005,
+                             frac_rew=0.005, seed=19)
+        algo_new = remake(algo_old, delta.apply(g))
+        rec = _one(algo_old, algo_new, prior)
+        payload[f"{name}_churn"] = rec
+        rows.append((
+            f"incr_{name}_churn", rec["us_warm"],
+            f"warm={rec['warm_rounds']} cold={rec['cold_rounds']} "
+            f"ratio={rec['ratio']:.2f} ok={rec['same_fixpoint']}",
+        ))
+
+    # headline: 1% insertion delta across all workloads (acceptance: <= 0.5)
+    head = [payload[f"{name}_add0.01"] for name in ALGOS]
+    warm = sum(r["warm_rounds"] for r in head)
+    cold = sum(r["cold_rounds"] for r in head)
+    ratio = warm / max(1, cold)
+    ok = all(r["same_fixpoint"] for r in head)
+    payload["headline_add0.01"] = {
+        "warm_rounds": warm, "cold_rounds": cold, "ratio": ratio, "ok": ok,
+    }
+    rows.append((
+        "incr_headline_add0.01", 0.0,
+        f"warm={warm} cold={cold} ratio={ratio:.2f} ok={ok} target<=0.50",
+    ))
+    common.save_json(out_dir, "incremental", payload)
+    return rows

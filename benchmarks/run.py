@@ -25,6 +25,7 @@ MODULES = [
     "kernel_bench",           # Pallas kernel structural bench
     "roofline_report",        # dry-run roofline aggregation
     "batched_queries",        # batched multi-query engine throughput
+    "incremental",            # evolving graphs: warm vs cold serving
 ]
 
 

@@ -24,7 +24,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.graphs.graph import Graph, order_to_rank
+from repro.graphs.graph import Graph, order_to_rank, rank_to_order
 from repro.core import partition as part_mod
 
 
@@ -321,3 +321,37 @@ def gograph_order(
     rank = order_to_rank(order)
     info["val"] = glob.val
     return (rank, info) if return_info else rank
+
+
+def extend_rank(g: Graph, rank_old: np.ndarray) -> np.ndarray:
+    """Incremental order maintenance for evolving graphs.
+
+    ``g`` is a mutated graph whose first ``len(rank_old)`` vertices keep
+    their ids; the rest are newly appended. Instead of re-running the full
+    divide-and-conquer pipeline, each new vertex is placed into the existing
+    order at its M-maximizing position via the same ``GetOptVal`` scan
+    (`_Inserter.insert`) that phase 5 uses for high-degree vertices —
+    O(deg(v) log deg(v)) per arrival, no global reorder. Placed vertices keep
+    their relative order exactly (their float vals are only bisected
+    between), so already-packed blocks and served warm states stay aligned
+    until the next full reorder.
+
+    New vertices insert in descending degree order (hubs first, so later
+    arrivals can position against them), matching the HD-phase convention.
+    Returns the extended rank over all ``g.n`` vertices.
+    """
+    rank_old = np.asarray(rank_old)
+    n_old = len(rank_old)
+    if n_old > g.n:
+        raise ValueError(f"rank_old covers {n_old} vertices, graph has {g.n}")
+    ins = _Inserter(g.n)
+    ins.seed_sequence(rank_to_order(rank_old))
+    csc_indptr, csc_src, _ = g.csc()
+    csr_indptr, csr_dst, _ = g.csr()
+    new_ids = np.arange(n_old, g.n, dtype=np.int64)
+    deg = g.degrees()
+    for v in new_ids[np.argsort(-deg[new_ids], kind="stable")]:
+        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]]
+        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]]
+        ins.insert(int(v), inn, np.ones(len(inn)), outn, np.ones(len(outn)))
+    return order_to_rank(np.argsort(ins.val, kind="stable"))

@@ -25,8 +25,15 @@ def positive_edge_fraction(g: Graph, rank: np.ndarray) -> float:
 
 
 def metric_m_jax(src: jnp.ndarray, dst: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
-    """JAX version (used inside jitted evaluation sweeps)."""
-    return jnp.sum((rank[src] < rank[dst]).astype(jnp.int64))
+    """JAX version (used inside jitted evaluation sweeps).
+
+    Accumulates in int32 explicitly: an int64 request silently downcasts to
+    int32 when x64 is disabled (the default), so spelling int32 out makes the
+    result independent of ``jax_enable_x64``. M counts at most |E| edges, so
+    int32 is exact up to 2**31 - 1 (~2.1e9) edges — beyond any graph the
+    single-host engines can hold.
+    """
+    return jnp.sum((rank[src] < rank[dst]).astype(jnp.int32), dtype=jnp.int32)
 
 
 def edge_span(g: Graph, rank: np.ndarray) -> float:

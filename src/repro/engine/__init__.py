@@ -6,9 +6,11 @@ from repro.engine.algorithms import (
     make_personalized_pagerank,
     multi_source_sssp,
     personalized_pagerank,
+    remake,
 )
 from repro.engine.async_block import run_async_block
 from repro.engine.distributed import run_distributed
+from repro.engine.incremental import permute_state, run_incremental, warm_state
 from repro.engine.priority import run_priority_block
 from repro.engine.sync import run_sync
 
@@ -20,8 +22,12 @@ __all__ = [
     "multi_source_sssp",
     "make_personalized_pagerank",
     "make_multi_source_sssp",
+    "remake",
     "run_sync",
     "run_async_block",
     "run_distributed",
     "run_priority_block",
+    "run_incremental",
+    "warm_state",
+    "permute_state",
 ]

@@ -59,6 +59,11 @@ class AlgoInstance:
     eps: float
     monotone_dir: int      # +1 increasing toward fixpoint, -1 decreasing
     exact_fn: Optional[Callable[[], np.ndarray]] = None
+    # constructor keyword args, recorded so `remake` can rebuild the same
+    # algorithm on a mutated graph (incremental serving). Vertex-id-valued
+    # params (source/seeds/target) are in the constructor's id space, so
+    # `remake` is only valid before any `relabel`.
+    params: Optional[dict] = None
 
     def __post_init__(self):
         for f in ("x0", "c", "fixed"):
@@ -106,6 +111,9 @@ class AlgoInstance:
             c=self.c[inv].copy(),
             fixed=self.fixed[inv].copy(),
             exact_fn=(lambda: self.exact()[inv]) if self.exact_fn is not None else None,
+            # id-valued params (source/seeds/target) are now stale; dropping
+            # them makes `remake` on a relabeled instance fail loudly
+            params=None,
         )
 
 
@@ -130,6 +138,7 @@ def make_pagerank(g: Graph, damping: float = 0.85, eps: float = 1e-6) -> AlgoIns
         residual="linf", eps=eps, monotone_dir=+1,
         exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w,
                                            np.full(g.n, 1.0 - damping, np.float32)),
+        params={"damping": damping, "eps": eps},
     )
 
 
@@ -143,6 +152,7 @@ def make_katz(g: Graph, alpha: float = 0.05, beta: float = 1.0, eps: float = 1e-
         residual="linf", eps=eps, monotone_dir=+1,
         exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w,
                                            np.full(g.n, beta, np.float32)),
+        params={"alpha": alpha, "beta": beta, "eps": eps},
     )
 
 
@@ -163,6 +173,7 @@ def make_php(g: Graph, target: int = 0, penalty: float = 0.8, eps: float = 1e-6)
         exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w,
                                            np.zeros(g.n, np.float32),
                                            fixed=fixed, x_fixed=x0),
+        params={"target": target, "penalty": penalty, "eps": eps},
     )
 
 
@@ -182,11 +193,16 @@ def make_adsorption(
         semiring=Semiring("sum", "mul"), combine="replace",
         residual="linf", eps=eps, monotone_dir=+1,
         exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w, c),
+        params={"seeds": seeds, "p_inj": p_inj, "p_cont": p_cont, "eps": eps},
     )
 
 
-def make_sssp(g: Graph, source: int = 0, eps: float = 0.0) -> AlgoInstance:
-    """x_v = min(x_v, min_u x_u + w_uv); converged when nothing changes."""
+def make_sssp(g: Graph, source: int = 0, eps: float = 0.5) -> AlgoInstance:
+    """x_v = min(x_v, min_u x_u + w_uv); converged when nothing changes.
+
+    ``eps`` thresholds the "changed" residual (#state entries that moved this
+    round); the 0.5 default means "stop when nothing changes".
+    """
     x0 = np.full(g.n, BIG, np.float32)
     x0[source] = 0.0
     return AlgoInstance(
@@ -194,15 +210,19 @@ def make_sssp(g: Graph, source: int = 0, eps: float = 0.0) -> AlgoInstance:
         w=g.weights.copy(), x0=x0, c=np.full(g.n, BIG, np.float32),
         fixed=np.zeros(g.n, bool),
         semiring=Semiring("min", "add"), combine="min_old",
-        residual="changed", eps=0.5, monotone_dir=-1,
+        residual="changed", eps=eps, monotone_dir=-1,
         exact_fn=lambda: _exact_dijkstra(g, source),
+        params={"source": source, "eps": eps},
     )
 
 
-def make_bfs(g: Graph, source: int = 0) -> AlgoInstance:
+def make_bfs(g: Graph, source: int = 0, eps: float = 0.5) -> AlgoInstance:
     """Hop counts = SSSP with unit weights."""
-    inst = make_sssp(Graph(g.n, g.src.copy(), g.dst.copy(), None), source)
-    return dataclasses.replace(inst, name="bfs", w=np.ones(g.m, np.float32))
+    inst = make_sssp(Graph(g.n, g.src.copy(), g.dst.copy(), None), source, eps=eps)
+    return dataclasses.replace(
+        inst, name="bfs", w=np.ones(g.m, np.float32),
+        params={"source": source, "eps": eps},
+    )
 
 
 def make_cc(g: Graph) -> AlgoInstance:
@@ -237,6 +257,7 @@ def make_cc(g: Graph) -> AlgoInstance:
         semiring=Semiring("min", "add"), combine="min_old",
         residual="changed", eps=0.5, monotone_dir=-1,
         exact_fn=_exact,
+        params={},
     )
 
 
@@ -276,6 +297,7 @@ def make_sswp(g: Graph, source: int = 0) -> AlgoInstance:
         semiring=Semiring("max", "min"), combine="max_old",
         residual="changed", eps=0.5, monotone_dir=+1,
         exact_fn=_exact,
+        params={"source": source},
     )
 
 
@@ -308,6 +330,7 @@ def make_personalized_pagerank(
         semiring=Semiring("sum", "mul"), combine="replace",
         residual="linf", eps=eps, monotone_dir=+1,
         exact_fn=lambda: _exact_linear_sum(g.n, g.src, g.dst, w, c),
+        params={"seeds": seeds, "damping": damping, "eps": eps},
     )
 
 
@@ -331,6 +354,7 @@ def make_multi_source_sssp(g: Graph, sources=None, eps: float = 0.5) -> AlgoInst
         semiring=Semiring("min", "add"), combine="min_old",
         residual="changed", eps=eps, monotone_dir=-1,
         exact_fn=_exact,
+        params={"sources": sources, "eps": eps},
     )
 
 
@@ -411,3 +435,26 @@ ALGORITHMS: dict[str, Callable[..., AlgoInstance]] = {
 
 def get_algorithm(name: str, g: Graph, **kw) -> AlgoInstance:
     return ALGORITHMS[name](g, **kw)
+
+
+def remake(algo: AlgoInstance, g: Graph) -> AlgoInstance:
+    """Rebuild ``algo`` (same constructor, same parameters) on a mutated
+    graph — the delta constructor of the incremental serving engine.
+
+    This re-runs the weight transform (e.g. PageRank's d/|OUT(u)| scaling),
+    so edges whose weight changed only *implicitly* — an insertion into u's
+    out-set rescales every existing u-edge — are picked up. ``algo`` must be
+    in its original (pre-`relabel`) id space and ``g`` must keep the old
+    vertex ids (new vertices appended at the end).
+    """
+    if algo.params is None:
+        raise ValueError(
+            f"algorithm {algo.name!r} has no recorded constructor params; "
+            "build it via the make_* constructors / get_algorithm"
+        )
+    if g.n < algo.n:
+        raise ValueError(
+            f"mutated graph has {g.n} vertices < instance's {algo.n}; "
+            "vertex removal is not supported (mask edges instead)"
+        )
+    return ALGORITHMS[algo.name](g, **algo.params)

@@ -43,19 +43,20 @@ from repro.engine import jax_ops as J
     jax.jit,
     static_argnames=(
         "bs", "nb", "sem_reduce", "sem_edge", "comb", "res_kind",
-        "max_iters", "inner", "n_real",
+        "max_iters", "inner", "n_real", "extrapolate_every",
     ),
 )
 def _run(
-    esrc, edst, ew, emask, x0, c, fixed,
+    esrc, edst, ew, emask, x_start, x0, c, fixed,
     bs: int, nb: int, n_real: int,
     sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
     eps: float, max_iters: int, identity: float, inner: int,
+    extrapolate_every: int,
 ):
     d = x0.shape[1]
     c_blk = c.reshape(nb, bs, d)
     fixed_blk = fixed.reshape(nb, bs, d)
-    x0_blk = x0.reshape(nb, bs, d)
+    x0_blk = x0.reshape(nb, bs, d)  # pin source stays x0 even when warm-started
     real_mask = (jnp.arange(nb * bs) < n_real)
 
     def block_update(i, x):
@@ -76,20 +77,21 @@ def _run(
         return jax.lax.fori_loop(0, nb, block_body, x)
 
     return harness.loop(
-        sweep, x0, res_kind=res_kind, eps=eps, max_iters=max_iters,
-        real_mask=real_mask,
+        sweep, x_start, res_kind=res_kind, eps=eps, max_iters=max_iters,
+        real_mask=real_mask, extrapolate_every=extrapolate_every,
     )
 
 
 @partial(
     jax.jit,
     static_argnames=("semiring", "combine", "bs", "res_kind", "max_iters",
-                     "n_real", "interpret"),
+                     "n_real", "interpret", "extrapolate_every"),
 )
 def _run_pallas(
     cols, tiles, c, x0, fixed, x_start,
     semiring: str, combine: str, bs: int, n_real: int,
     res_kind: str, eps: float, max_iters: int, interpret: bool,
+    extrapolate_every: int,
 ):
     from repro.kernels.gs_sweep import gs_sweep_pallas
 
@@ -103,29 +105,38 @@ def _run_pallas(
 
     return harness.loop(
         sweep, x_start, res_kind=res_kind, eps=eps, max_iters=max_iters,
-        real_mask=real_mask,
+        real_mask=real_mask, extrapolate_every=extrapolate_every,
     )
 
 
 def run_async_block(
     algo: AlgoInstance, bs: int = 256, max_iters: int = 2000, inner: int = 1,
     x_init: np.ndarray | None = None, backend: str = "jax",
+    extrapolate_every: int = 0,
 ) -> RunResult:
-    """x_init: resume from a previous state (checkpointed macro-stepping).
+    """x_init: resume from a previous state (checkpointed macro-stepping or
+    the incremental serving engine's warm starts).
 
     backend: "jax" (gather/segment-reduce sweep) or "pallas" (fused
     `gs_sweep` kernel per sweep; interpret mode off-TPU, sum/min semirings).
+
+    extrapolate_every: Aitken acceleration period for linear (sum-semiring)
+    systems; 0 = off (see `harness.loop`).
     """
+    harness.check_extrapolation(algo, extrapolate_every)
     if backend == "pallas":
-        return _run_async_block_pallas(algo, bs, max_iters, inner, x_init)
+        return _run_async_block_pallas(
+            algo, bs, max_iters, inner, x_init,
+            extrapolate_every=extrapolate_every,
+        )
     if backend != "jax":
         raise ValueError(f"unknown backend {backend!r}")
     be, x0, c, fixed, npad = harness.pack(algo, bs)
     x_start = harness.init_state(x0, x_init, algo.n)
     out = _run(
         jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
-        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(c),
-        jnp.asarray(fixed),
+        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(x0),
+        jnp.asarray(c), jnp.asarray(fixed),
         bs=bs, nb=be.nb, n_real=algo.n,
         sem_reduce=algo.semiring.reduce,
         sem_edge=algo.semiring.edge_op,
@@ -135,12 +146,13 @@ def run_async_block(
         max_iters=max_iters,
         identity=algo.semiring.identity,
         inner=inner,
+        extrapolate_every=extrapolate_every,
     )
     return harness.finalize(algo, *out)
 
 
 def _run_async_block_pallas(
-    algo, bs, max_iters, inner, x_init, interpret=None
+    algo, bs, max_iters, inner, x_init, interpret=None, extrapolate_every=0
 ) -> RunResult:
     from repro.kernels.ops import _auto_interpret, pack_algorithm
 
@@ -154,5 +166,6 @@ def _run_async_block_pallas(
         semiring=ops["semiring"], combine=ops["combine"], bs=bs,
         n_real=algo.n, res_kind=algo.residual, eps=algo.eps,
         max_iters=max_iters, interpret=_auto_interpret(interpret),
+        extrapolate_every=extrapolate_every,
     )
     return harness.finalize(algo, *out)

@@ -99,7 +99,13 @@ def run_distributed(
     bs: int = 256,
     max_iters: int = 2000,
     inner: int = 1,
+    x_init: np.ndarray | None = None,
+    extrapolate_every: int = 0,
 ) -> RunResult:
+    """``x_init`` warm-starts from a prior state (incremental serving);
+    ``extrapolate_every`` enables Aitken acceleration for linear systems
+    (see `harness.loop`)."""
+    harness.check_extrapolation(algo, extrapolate_every)
     if mesh is None:
         mesh = make_mesh((len(jax.devices()),), (axis,))
     ndev = mesh.shape[axis]
@@ -129,7 +135,8 @@ def run_distributed(
     fx[: npad] = fixed
     c_blk = c.reshape(nb, bs)
     fixed_blk = fx.reshape(nb, bs)
-    x0_blk = x0.reshape(nb, bs)
+    x0_blk = x0.reshape(nb, bs)  # pin source stays x0 even when warm-started
+    x_start = harness.init_state(x0[:, None], x_init, algo.n)[:, 0]
 
     superstep, _ = make_superstep(
         mesh, axis, nb, bs,
@@ -142,8 +149,9 @@ def run_distributed(
     res_kind = algo.residual
     eps = algo.eps
 
-    @partial(jax.jit, static_argnames=("max_iters",))
-    def _run(x0v, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk, real_mask, max_iters: int):
+    @partial(jax.jit, static_argnames=("max_iters", "extrapolate_every"))
+    def _run(x0v, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk, real_mask,
+             max_iters: int, extrapolate_every: int):
         # the shard_map superstep is written over 1-D state vectors; lift it
         # to the (N, 1) batched contract of the shared round driver
         def round_fn(x2d):
@@ -154,12 +162,15 @@ def run_distributed(
         return harness.loop(
             round_fn, x0v[:, None], res_kind=res_kind, eps=eps,
             max_iters=max_iters, real_mask=real_mask,
+            extrapolate_every=extrapolate_every,
         )
 
     with set_mesh(mesh):
         out = _run(
-            jnp.asarray(x0), jnp.asarray(esrc), jnp.asarray(edst), jnp.asarray(ew),
-            jnp.asarray(emask), jnp.asarray(c_blk), jnp.asarray(fixed_blk),
-            jnp.asarray(x0_blk), jnp.asarray(real_mask), max_iters=max_iters,
+            jnp.asarray(x_start), jnp.asarray(esrc), jnp.asarray(edst),
+            jnp.asarray(ew), jnp.asarray(emask), jnp.asarray(c_blk),
+            jnp.asarray(fixed_blk), jnp.asarray(x0_blk),
+            jnp.asarray(real_mask), max_iters=max_iters,
+            extrapolate_every=extrapolate_every,
         )
     return harness.finalize(algo, *out)

@@ -8,12 +8,18 @@ States are batched ``f32[n, d]`` (column j = independent query j, e.g. one
 personalized-PageRank seed); convergence is per column — a converged column
 freezes and stops contributing to the residual, so each query reports its
 own round count. ``d = 1`` is the scalar mode and matches the paper's runs.
+
+``x_init`` warm-starts the loop from a prior state (checkpointed
+macro-stepping or the incremental serving engine) while ``x0`` keeps pinning
+fixed vertices; ``extrapolate_every`` turns on the shared driver's Aitken
+acceleration (linear sum-semiring systems only — see `harness.loop`).
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
@@ -21,11 +27,12 @@ from repro.engine import harness
 from repro.engine import jax_ops as J
 
 
-@partial(jax.jit, static_argnames=("n", "sem_reduce", "sem_edge", "comb", "res_kind", "max_iters"))
+@partial(jax.jit, static_argnames=("n", "sem_reduce", "sem_edge", "comb", "res_kind",
+                                   "max_iters", "extrapolate_every"))
 def _run(
-    src, dst, w, x0, c, fixed,
+    src, dst, w, x_start, x0, c, fixed,
     n: int, sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
-    eps: float, max_iters: int, identity: float,
+    eps: float, max_iters: int, identity: float, extrapolate_every: int,
 ):
     def round_fn(x):
         msgs = J.edge_op(sem_edge, x[src], w)
@@ -33,14 +40,21 @@ def _run(
         return J.combine(comb, agg, c, x, fixed, x0)
 
     return harness.loop(
-        round_fn, x0, res_kind=res_kind, eps=eps, max_iters=max_iters
+        round_fn, x_start, res_kind=res_kind, eps=eps, max_iters=max_iters,
+        extrapolate_every=extrapolate_every,
     )
 
 
-def run_sync(algo: AlgoInstance, max_iters: int = 2000) -> RunResult:
+def run_sync(
+    algo: AlgoInstance, max_iters: int = 2000,
+    x_init: np.ndarray | None = None, extrapolate_every: int = 0,
+) -> RunResult:
+    harness.check_extrapolation(algo, extrapolate_every)
     arrs = J.device_arrays(algo)
+    x_start = harness.init_state(np.asarray(algo.x0), x_init, algo.n)
     out = _run(
-        arrs["src"], arrs["dst"], arrs["w"], arrs["x0"], arrs["c"], arrs["fixed"],
+        arrs["src"], arrs["dst"], arrs["w"],
+        jax.numpy.asarray(x_start), arrs["x0"], arrs["c"], arrs["fixed"],
         n=algo.n,
         sem_reduce=algo.semiring.reduce,
         sem_edge=algo.semiring.edge_op,
@@ -49,5 +63,6 @@ def run_sync(algo: AlgoInstance, max_iters: int = 2000) -> RunResult:
         eps=algo.eps,
         max_iters=max_iters,
         identity=algo.semiring.identity,
+        extrapolate_every=extrapolate_every,
     )
     return harness.finalize(algo, *out)

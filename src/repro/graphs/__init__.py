@@ -1,4 +1,5 @@
 from repro.graphs.graph import Graph
+from repro.graphs.delta import GraphDelta, random_delta
 from repro.graphs import generators, io, blocked
 
-__all__ = ["Graph", "generators", "io", "blocked"]
+__all__ = ["Graph", "GraphDelta", "random_delta", "generators", "io", "blocked"]

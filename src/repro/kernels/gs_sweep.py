@@ -33,6 +33,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.engine.algorithms import BIG
 
+# semiring/combine pairs the kernel body actually implements: sum-reduce
+# rounds (PageRank family, combine c + agg) and min-plus relaxations
+# (SSSP/BFS/CC, combine min(old, c, agg)).
+_SUPPORTED = {("plus_times", "replace"), ("min_plus", "min_old")}
+
 
 def _make_kernel(semiring: str, combine: str, k_max: int, bs: int):
     def kernel(cols_ref, tiles_ref, c_ref, x0_ref, fixed_ref, x_hbm, x_out,
@@ -101,6 +106,16 @@ def gs_sweep_pallas(
     bs: int,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    # the accumulator init and tile reduction are only implemented for these
+    # pairs; anything else (e.g. max-semiring "max_old" for SSWP) would start
+    # the accumulator at +BIG — the *min*-semiring identity — and silently
+    # compute garbage. Mirror pack_algorithm's guard (kernels/ops.py) here so
+    # direct kernel callers fail loudly too.
+    if (semiring, combine) not in _SUPPORTED:
+        raise NotImplementedError(
+            f"gs_sweep_pallas: unsupported semiring/combine pair "
+            f"({semiring!r}, {combine!r}); supported: {sorted(_SUPPORTED)}"
+        )
     nb, k_max = cols.shape
     n, d = x.shape
     assert n == nb * bs

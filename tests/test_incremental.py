@@ -1,0 +1,414 @@
+"""Evolving-graph serving: GraphDelta, warm starts, the incremental engine,
+incremental order maintenance — plus regression tests for the PR's engine
+bugfixes (sssp/bfs eps plumbing, metric_m_jax dtype, gs_sweep guard)."""
+import numpy as np
+import pytest
+
+from repro.core.gograph import extend_rank, gograph_order
+from repro.engine import (
+    ALGORITHMS,
+    get_algorithm,
+    remake,
+    run_async_block,
+    run_incremental,
+    run_sync,
+)
+from repro.engine.algorithms import make_bfs, make_sssp
+from repro.engine.incremental import instance_edge_diff, warm_state
+from repro.graphs import generators as gen
+from repro.graphs.delta import GraphDelta, random_delta
+from repro.graphs.graph import Graph
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    g = gen.scrambled(gen.powerlaw_cluster(700, 4, p=0.4, seed=1), seed=9)
+    gw = gen.with_random_weights(g, seed=2)
+    return g, gw
+
+
+def _algo(name, g, gw):
+    return get_algorithm(name, gw if name in ("sssp", "sswp", "ms_sssp") else g)
+
+
+ENGINES = {
+    "sync": lambda a, **kw: run_sync(a, **kw),
+    "async_block": lambda a, **kw: run_async_block(a, bs=64, **kw),
+}
+
+
+# ---------------------------------------------------------------------------
+# GraphDelta
+# ---------------------------------------------------------------------------
+
+def test_graph_delta_apply_semantics():
+    g = Graph(4, [0, 1, 2], [1, 2, 3], np.array([1.0, 2.0, 3.0], np.float32))
+    d = GraphDelta(
+        n_add=1,
+        add_src=[3, 4], add_dst=[4, 0], add_w=[5.0, 6.0],
+        del_src=[0], del_dst=[1],
+        rew_src=[1], rew_dst=[2], rew_w=[9.0],
+    )
+    g2 = d.apply(g)
+    assert g2.n == 5
+    pairs = {(int(s), int(t)): float(w)
+             for s, t, w in zip(g2.src, g2.dst, g2.weights)}
+    assert pairs == {(1, 2): 9.0, (2, 3): 3.0, (3, 4): 5.0, (4, 0): 6.0}
+    # original untouched
+    assert g.m == 3 and g.n == 4
+
+
+def test_graph_delta_unweighted_stays_unweighted():
+    g = Graph(3, [0, 1], [1, 2])
+    g2 = GraphDelta(add_src=[2], add_dst=[0]).apply(g)
+    assert g2.w is None and g2.m == 3
+    # reweighting an unweighted graph materializes weights
+    g3 = GraphDelta(rew_src=[0], rew_dst=[1], rew_w=[4.0]).apply(g)
+    assert g3.w is not None
+    assert float(g3.weights[0]) == 4.0 and float(g3.weights[1]) == 1.0
+
+
+def test_graph_delta_rejects_out_of_range_del_rew():
+    """Out-of-range del/rew endpoints would alias a different edge through
+    the src*n+dst key packing (e.g. key 0*10+13 == 1*10+3)."""
+    g = Graph(10, [1], [3], np.array([1.0], np.float32))
+    with pytest.raises(ValueError, match="out of range"):
+        GraphDelta(rew_src=[0], rew_dst=[13], rew_w=[99.0]).apply(g)
+    with pytest.raises(ValueError, match="out of range"):
+        GraphDelta(del_src=[0], del_dst=[13]).apply(g)
+    assert float(g.weights[0]) == 1.0
+
+
+def test_random_delta_no_parallel_edges(graphs):
+    """Seed edges for appended vertices must join the dedupe set, or a later
+    uniform insertion can duplicate them (parallel edges double a sum
+    semiring's contribution)."""
+    g, _ = graphs
+    for seed in range(8):
+        d = random_delta(g, frac_add=0.05, n_add_vertices=10, seed=seed)
+        g2 = d.apply(g)
+        keys = g2.src.astype(np.int64) * g2.n + g2.dst
+        assert len(np.unique(keys)) == len(keys), f"seed {seed}"
+
+
+def test_random_delta_shapes_and_ranges(graphs):
+    g, gw = graphs
+    d = random_delta(gw, frac_add=0.02, frac_del=0.01, frac_rew=0.01,
+                     n_add_vertices=5, seed=0)
+    g2 = d.apply(gw)
+    assert g2.n == gw.n + 5
+    assert d.add_w is not None  # weighted graph gets weighted insertions
+    # every appended vertex has at least one incident edge
+    deg = g2.degrees()
+    assert (deg[gw.n:] > 0).all()
+    # deleted pairs are gone
+    keys2 = set((g2.src.astype(np.int64) * g2.n + g2.dst).tolist())
+    for s, t in zip(d.del_src, d.del_dst):
+        assert int(s) * g2.n + int(t) not in keys2
+
+
+# ---------------------------------------------------------------------------
+# warm starts: every engine x every algorithm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_warm_restart_is_bitwise_noop(graphs, name, engine):
+    """x_init = converged state => one verification sweep, state unchanged
+    bitwise (the loop keeps the pre-sweep state of a converging column)."""
+    g, gw = graphs
+    algo = _algo(name, g, gw)
+    run = ENGINES[engine]
+    r1 = run(algo)
+    assert r1.converged
+    r2 = run(algo, x_init=r1.x)
+    assert r2.rounds <= 1, f"{name}/{engine}: {r2.rounds} rounds"
+    np.testing.assert_array_equal(r2.x, r1.x, err_msg=f"{name}/{engine}")
+
+
+def test_warm_restart_pallas_backend(graphs):
+    g, gw = graphs
+    for name in ("pagerank", "sssp"):  # the kernel's two semiring pairs
+        algo = _algo(name, g, gw)
+        r1 = run_async_block(algo, bs=64, backend="pallas", max_iters=300)
+        r2 = run_async_block(algo, bs=64, backend="pallas", max_iters=300,
+                             x_init=r1.x)
+        assert r2.rounds <= 1 and np.array_equal(r2.x, r1.x), name
+
+
+def test_warm_restart_distributed_all_algorithms():
+    from tests.util import run_with_devices
+
+    run_with_devices("""
+import numpy as np
+from repro.graphs import generators as gen
+from repro.engine import ALGORITHMS, get_algorithm
+from repro.engine.distributed import run_distributed
+g = gen.scrambled(gen.powerlaw_cluster(300, 3, p=0.4, seed=1), seed=5)
+gw = gen.with_random_weights(g, seed=2)
+for name in sorted(ALGORITHMS):
+    algo = get_algorithm(name, gw if name in ('sssp', 'sswp', 'ms_sssp') else g)
+    r1 = run_distributed(algo, bs=32)
+    assert r1.converged, name
+    r2 = run_distributed(algo, bs=32, x_init=r1.x)
+    assert r2.rounds <= 1, (name, r2.rounds)
+    np.testing.assert_array_equal(r2.x, r1.x, err_msg=name)
+print('ok')
+""", n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# incremental engine vs cold recompute
+# ---------------------------------------------------------------------------
+
+def _check_incremental(name, graph, delta, engine="async_block"):
+    algo_old = get_algorithm(name, graph)
+    g2 = delta.apply(graph)
+    algo_new = remake(algo_old, g2)
+    run = ENGINES[engine]
+    prior = run(algo_old)
+    cold = run(algo_new)
+    kw = {"bs": 64} if engine == "async_block" else {}
+    warm = run_incremental(algo_new, algo_old, prior, engine=engine, **kw)
+    assert warm.converged
+    if algo_new.semiring.reduce == "sum":
+        # both endpoints stop on successive-change <= eps, i.e. each sits
+        # within ~eps*rho/(1-rho) of the fixpoint; 10*eps bounds the gap
+        np.testing.assert_allclose(
+            warm.x, cold.x, atol=10 * algo_new.eps, rtol=0,
+            err_msg=f"{name} warm vs cold",
+        )
+    else:
+        np.testing.assert_array_equal(warm.x, cold.x, err_msg=name)
+    return warm, cold
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_incremental_matches_cold_insertions(graphs, name):
+    g, gw = graphs
+    graph = gw if name in ("sssp", "sswp", "ms_sssp") else g
+    delta = random_delta(graph, frac_add=0.01, seed=3)
+    _check_incremental(name, graph, delta)
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_incremental_matches_cold_churn(graphs, name):
+    """Deletions + reweights: the signed-residual path for sum semirings,
+    the masked regional recompute for min/max."""
+    g, gw = graphs
+    graph = gw if name in ("sssp", "sswp", "ms_sssp") else g
+    delta = random_delta(graph, frac_add=0.005, frac_del=0.005,
+                         frac_rew=0.005, n_add_vertices=4, seed=4)
+    _check_incremental(name, graph, delta)
+
+
+def test_incremental_sync_engine(graphs):
+    g, gw = graphs
+    delta = random_delta(g, frac_add=0.01, seed=5)
+    _check_incremental("pagerank", g, delta, engine="sync")
+
+
+def test_incremental_batched_queries(graphs):
+    """A batched (d > 1) PPR instance absorbs a delta column-for-column."""
+    from repro.engine import personalized_pagerank
+
+    g, _ = graphs
+    seeds = [0, 13, 202, 77]
+    algo_old = personalized_pagerank(g, seeds)
+    delta = random_delta(g, frac_add=0.01, seed=6)
+    g2 = delta.apply(g)
+    algo_new = personalized_pagerank(g2, seeds)
+    prior = run_async_block(algo_old, bs=64)
+    cold = run_async_block(algo_new, bs=64)
+    warm = run_incremental(algo_new, algo_old, prior, bs=64)
+    assert warm.x.shape == (g2.n, len(seeds))
+    np.testing.assert_allclose(warm.x, cold.x, atol=10 * algo_new.eps, rtol=0)
+
+
+def test_incremental_saves_rounds_on_insertions(graphs):
+    """The serving claim: a 1% insertion delta converges warm in well under
+    the cold round count (the benchmark's acceptance bound is 50%)."""
+    g, gw = graphs
+    total_warm = total_cold = 0
+    for name in ("pagerank", "php", "sssp", "bfs"):
+        graph = gw if name == "sssp" else g
+        delta = random_delta(graph, frac_add=0.01, seed=7)
+        warm, cold = _check_incremental(name, graph, delta)
+        total_warm += warm.rounds
+        total_cold += cold.rounds
+    assert total_warm <= 0.5 * total_cold, (total_warm, total_cold)
+
+
+def test_incremental_rejects_mismatched_instances(graphs):
+    g, gw = graphs
+    a1 = get_algorithm("pagerank", g)
+    a2 = get_algorithm("katz", g)
+    with pytest.raises(ValueError, match="instance mismatch"):
+        run_incremental(a2, a1, np.zeros(g.n, np.float32))
+
+
+def test_warm_state_pins_fixed_and_extends(graphs):
+    g, _ = graphs
+    algo_old = get_algorithm("php", g, target=3)
+    delta = random_delta(g, frac_add=0.005, n_add_vertices=6, seed=8)
+    algo_new = remake(algo_old, delta.apply(g))
+    prior = np.full(g.n, 0.25, np.float32)
+    x = warm_state(algo_new, algo_old, prior)
+    assert x.shape == (g.n + 6, 1)
+    assert x[3, 0] == 1.0           # pinned target serves its pin, not prior
+    assert (x[g.n:, 0] == 0.0).all()  # appended vertices start at x0
+    assert x[4, 0] == np.float32(0.25)
+
+
+def test_instance_edge_diff_classifies(graphs):
+    _, gw = graphs
+    algo_old = get_algorithm("sssp", gw)
+    # raise one weight (loosening for min), lower another (tightening),
+    # delete one edge, add one
+    d = GraphDelta(
+        add_src=[int(gw.dst[0])], add_dst=[int(gw.src[0])],
+        del_src=[int(gw.src[1])], del_dst=[int(gw.dst[1])],
+        rew_src=[int(gw.src[2]), int(gw.src[3])],
+        rew_dst=[int(gw.dst[2]), int(gw.dst[3])],
+        rew_w=[float(gw.weights[2]) + 5.0, max(0.01, float(gw.weights[3]) - 0.5)],
+    )
+    algo_new = remake(algo_old, d.apply(gw))
+    diff = instance_edge_diff(algo_old, algo_new)
+    assert diff.loosening
+    assert int(gw.dst[1]) in set(diff.removed_dst.tolist())
+    assert int(gw.dst[2]) in set(diff.loosened_dst.tolist())
+    assert int(gw.dst[3]) in set(diff.tightened_dst.tolist())
+    # insert-only delta is not loosening
+    d2 = GraphDelta(add_src=[0], add_dst=[int(gw.src[0])])
+    diff2 = instance_edge_diff(algo_old, remake(algo_old, d2.apply(gw)))
+    assert not diff2.loosening
+    # tighter/looser is meaningless for sum semirings (they diff by residual)
+    pr = get_algorithm("pagerank", gw)
+    with pytest.raises(ValueError, match="min/max"):
+        instance_edge_diff(pr, pr)
+
+
+# ---------------------------------------------------------------------------
+# incremental order maintenance
+# ---------------------------------------------------------------------------
+
+def test_extend_rank_places_new_vertices(graphs):
+    g, _ = graphs
+    rank = gograph_order(g)
+    delta = random_delta(g, frac_add=0.02, n_add_vertices=12, seed=11)
+    g2 = delta.apply(g)
+    rank2 = extend_rank(g2, rank)
+    assert rank2.shape == (g2.n,)
+    assert np.array_equal(np.sort(rank2), np.arange(g2.n))  # permutation
+    # old vertices keep their relative order exactly
+    old_slots = rank2[: g.n]
+    assert np.array_equal(np.argsort(np.argsort(old_slots)),
+                          np.argsort(np.argsort(rank)))
+
+
+def test_incremental_with_rank_matches_without(graphs):
+    g, _ = graphs
+    algo_old = get_algorithm("pagerank", g)
+    rank = gograph_order(g)
+    delta = random_delta(g, frac_add=0.01, n_add_vertices=5, seed=12)
+    g2 = delta.apply(g)
+    algo_new = remake(algo_old, g2)
+    rank2 = extend_rank(g2, rank)
+    prior = run_async_block(algo_old, bs=64)
+    plain = run_incremental(algo_new, algo_old, prior, bs=64)
+    ranked = run_incremental(algo_new, algo_old, prior, bs=64, rank=rank2)
+    # both converge to the same fixpoint, reported in id space
+    np.testing.assert_allclose(ranked.x, plain.x, atol=10 * algo_new.eps, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# regression tests for this PR's bugfixes
+# ---------------------------------------------------------------------------
+
+def test_sssp_eps_is_plumbed(graphs):
+    """make_sssp silently hardcoded eps=0.5; the argument must stick."""
+    _, gw = graphs
+    assert make_sssp(gw, 0, eps=2.5).eps == 2.5
+    assert make_sssp(gw, 0).eps == 0.5      # default preserved
+    assert make_bfs(gw, 0, eps=1.5).eps == 1.5
+    assert make_bfs(gw, 0).eps == 0.5
+    # a loose eps ("stop with <= 2 states still moving") must stop earlier
+    tight = run_sync(make_sssp(gw, 0))
+    loose = run_sync(make_sssp(gw, 0, eps=2.5))
+    assert loose.rounds <= tight.rounds
+
+
+def test_metric_m_jax_int32_without_x64(graphs):
+    """metric_m_jax built int64 sums that silently downcast when x64 is off;
+    the dtype must now be explicitly int32 and the count exact."""
+    import jax.numpy as jnp
+
+    from repro.core.metric import metric_m, metric_m_jax
+
+    g, _ = graphs
+    rank = np.random.default_rng(0).permutation(g.n)
+    out = metric_m_jax(jnp.asarray(g.src), jnp.asarray(g.dst),
+                       jnp.asarray(rank))
+    assert out.dtype == jnp.int32
+    assert int(out) == metric_m(g, rank)
+
+
+def test_extrapolation_rejected_for_nonlinear_semirings(graphs):
+    """Aitken extrapolation on a min/max lattice sweep NaNs on the BIG
+    sentinels; the engines must refuse it rather than return garbage."""
+    _, gw = graphs
+    algo = get_algorithm("sssp", gw)
+    with pytest.raises(NotImplementedError, match="sum-semiring"):
+        run_sync(algo, extrapolate_every=2)
+    with pytest.raises(NotImplementedError, match="sum-semiring"):
+        run_async_block(algo, bs=64, extrapolate_every=2)
+
+
+def test_extrapolation_period_must_leave_mixing_rounds(graphs):
+    """Period 1 jumps every round off the previous jump's own step — the
+    amplifications compound and the iteration NaNs; reject <2 up front."""
+    g, _ = graphs
+    algo = get_algorithm("pagerank", g)
+    for bad in (1, -3):
+        with pytest.raises(ValueError, match=">= 2"):
+            run_sync(algo, extrapolate_every=bad)
+    assert run_sync(algo, extrapolate_every=2).converged
+
+
+def test_remake_refuses_relabeled_instance(graphs):
+    """relabel drops id-valued params, so remake on a relabeled instance
+    fails loudly instead of pinning the wrong vertex in rank space."""
+    _, gw = graphs
+    algo = get_algorithm("sssp", gw, source=5)
+    rank = np.random.default_rng(0).permutation(gw.n)
+    with pytest.raises(ValueError, match="params"):
+        remake(algo.relabel(rank), gw)
+
+
+def test_incremental_rejects_explicit_extrapolation_on_minmax(graphs):
+    _, gw = graphs
+    algo_old = get_algorithm("sssp", gw)
+    delta = random_delta(gw, frac_add=0.01, seed=13)
+    algo_new = remake(algo_old, delta.apply(gw))
+    prior = run_async_block(algo_old, bs=64)
+    with pytest.raises(NotImplementedError, match="sum-semiring"):
+        run_incremental(algo_new, algo_old, prior, bs=64, extrapolate_every=4)
+
+
+def test_gs_sweep_rejects_unsupported_combos():
+    """The kernel initializes its accumulator for plus_times/min_plus only;
+    a max-semiring request (sswp's "max_old") must fail loudly, not return
+    garbage shaped like an answer."""
+    import jax.numpy as jnp
+
+    from repro.kernels.gs_sweep import gs_sweep_pallas
+
+    bs = 8
+    cols = jnp.zeros((1, 1), jnp.int32)
+    tiles = jnp.zeros((1, 1, bs, bs), jnp.float32)
+    v = jnp.zeros((bs, 1), jnp.float32)
+    for semiring, combine in [("min_plus", "max_old"), ("min_plus", "replace"),
+                              ("plus_times", "max_old")]:
+        with pytest.raises(NotImplementedError):
+            gs_sweep_pallas(cols, tiles, v, v, v, v, semiring=semiring,
+                            combine=combine, bs=bs, interpret=True)
