@@ -1,44 +1,102 @@
-"""Kernel microbench: gs_sweep / bsr_spmm wall-clock (interpret mode — the
-numbers are CPU emulation; the derived column reports the structural roofline
-quantities that transfer to TPU: VMEM working set and DMA counts)."""
+"""Kernel microbench: gs_sweep wall-clock + flat-vs-dense layout accounting.
+
+Timing is interpret mode on CPU — the absolute numbers are emulation, but the
+structural quantities that transfer to TPU are exact: nnz_blocks (= gather
+DMAs per sweep), mean DMAs per destination block, and the tile bytes the
+ragged flat layout moves vs what the dense ``(nb, k_max)`` padding moved.
+
+Methodology: one warmup call absorbs jit/interpret compilation, then the
+reported ``us_per_sweep_interpret`` is the median of ``REPEATS >= 3``
+steady-state runs (the old single cold-timed call reported compile time, not
+sweep time).
+
+Besides the per-run JSON under ``out_dir``, writes ``BENCH_kernels.json`` at
+the repo root so the kernel perf trajectory is tracked across PRs; CI's
+bench-smoke job asserts the flat layout's padding win is recorded there.
+"""
 from __future__ import annotations
 
+import json
+import os
+import statistics
 import time
 
-
-from benchmarks.common import save_json
+from benchmarks.common import FAST, save_json
 from repro.core.gograph import gograph_order
 from repro.engine import get_algorithm
 from repro.graphs import generators as gen
 from repro.kernels import gs_sweep
 from repro.kernels.ops import pack_algorithm
 
+REPEATS = 3
+# bs=16 exposes the block-level skew (hub row-blocks vs tail) even on the
+# small --fast graph; bs=64 is the TPU-native tile-friendly setting.
+BLOCK_SIZES = (16, 64)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sweep_median_us(ops) -> float:
+    args = (ops["rowptr"], ops["tilecols"], ops["tiles"], ops["c"],
+            ops["x0"], ops["fixed"])
+    kw = dict(semiring=ops["semiring"], combine=ops["combine"])
+    # warmup: first call pays jit + interpret lowering, not sweep work
+    gs_sweep(*args, ops["x"], **kw).block_until_ready()
+    samples = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        gs_sweep(*args, ops["x"], **kw).block_until_ready()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
 
 def run(out_dir: str = "experiments/paper"):
     rows = []
     results = {}
-    g = gen.scrambled(gen.powerlaw_cluster(2000, 4, seed=1), seed=5)
+    n = 200 if FAST else 2000
+    g = gen.scrambled(gen.powerlaw_cluster(n, 4, seed=1), seed=5)
     rank = gograph_order(g)
     for label, graph in (("default", g), ("gograph", g.relabel(rank))):
         algo = get_algorithm("pagerank", graph)
-        for bs in (64, 128):
+        for bs in BLOCK_SIZES:
             ops = pack_algorithm(algo, bs=bs)
+            # FlatBSRMatrix.stats() carries the dense-padded baseline's
+            # accounting too (dense_tile_bytes / padding_waste), so no dense
+            # repack is needed here (tests assert the two layouts' stats agree)
             stats = ops["bsr_stats"]
-            t0 = time.perf_counter()
-            out = gs_sweep(ops["cols"], ops["tiles"], ops["c"], ops["x0"],
-                           ops["fixed"], ops["x"], semiring=ops["semiring"],
-                           combine=ops["combine"])
-            out.block_until_ready()
-            us = (time.perf_counter() - t0) * 1e6
-            vmem_kb = (bs * bs * 4 * stats["k_max"] + 2 * bs * 4) / 1024
+            us = _sweep_median_us(ops)
+            # steady-state VMEM per grid step: 2 double-buffered tiles + 7
+            # (bs, d) state blocks (2 gathers, old, acc, c, x0, fixed) —
+            # independent of k_max now
+            d = int(ops["x"].shape[1])
+            vmem_kb = (2 * bs * bs * 4 + 7 * bs * d * 4) / 1024
             results[f"{label}_bs{bs}"] = {
                 "us_per_sweep_interpret": us,
                 "mean_dma_per_block": stats["mean_colblocks_per_rowblock"],
                 "nnz_blocks": stats["nnz_blocks"],
-                "vmem_tile_kb": vmem_kb,
+                "dma_per_sweep": stats["nnz_blocks"],
+                "k_max": stats["k_max"],
+                "padding_waste_dense": stats["padding_waste"],
+                "tile_bytes_flat": stats["tile_bytes"],
+                "tile_bytes_dense": stats["dense_tile_bytes"],
+                "tile_bytes_saved": stats["tile_bytes_saved"],
+                "vmem_step_kb": vmem_kb,
             }
             rows.append((f"kernel/gs_sweep/{label}_bs{bs}", us,
                          f"dma/blk={stats['mean_colblocks_per_rowblock']:.1f} "
+                         f"waste={stats['padding_waste']:.2f} "
                          f"vmem={vmem_kb:.0f}KB"))
     save_json(out_dir, "kernel_bench", results)
+    payload = {
+        "graph": {"kind": "powerlaw_cluster", "n": n, "fast": FAST},
+        "configs": results,
+        "max_padding_waste_dense": max(
+            r["padding_waste_dense"] for r in results.values()
+        ),
+        "total_tile_bytes_saved": sum(
+            r["tile_bytes_saved"] for r in results.values()
+        ),
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_kernels.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
     return rows

@@ -301,6 +301,42 @@ def make_sswp(g: Graph, source: int = 0) -> AlgoInstance:
     )
 
 
+def make_reachability(g: Graph, source: int = 0) -> AlgoInstance:
+    """0/1 reachability from ``source`` as a max-times fixpoint:
+    x_v = max(x_v, max_{u in IN(v)} x_u * 1) with x_source = 1.
+
+    The (max, mul) semiring is the second max-reduce pair the fused kernels
+    implement (`max_times`); states stay in {0, 1}, so the nonnegative-state
+    contract that semiring's 0-fill relies on holds by construction.
+    """
+    x0 = np.zeros(g.n, np.float32)
+    x0[source] = 1.0
+
+    def _exact() -> np.ndarray:
+        reach = np.zeros(g.n, bool)
+        reach[source] = True
+        indptr, nbrs, _ = g.csr()
+        frontier = [source]
+        while frontier:
+            v = frontier.pop()
+            for j in range(indptr[v], indptr[v + 1]):
+                u = int(nbrs[j])
+                if not reach[u]:
+                    reach[u] = True
+                    frontier.append(u)
+        return reach.astype(np.float32)
+
+    return AlgoInstance(
+        name="reachability", n=g.n, src=g.src.copy(), dst=g.dst.copy(),
+        w=np.ones(g.m, np.float32), x0=x0,
+        c=np.full(g.n, -BIG, np.float32), fixed=np.zeros(g.n, bool),
+        semiring=Semiring("max", "mul"), combine="max_old",
+        residual="changed", eps=0.5, monotone_dir=+1,
+        exact_fn=_exact,
+        params={"source": source},
+    )
+
+
 # --------------------------------------------------------------------------
 # batched multi-query constructors
 # --------------------------------------------------------------------------
@@ -428,6 +464,7 @@ ALGORITHMS: dict[str, Callable[..., AlgoInstance]] = {
     "bfs": make_bfs,
     "cc": make_cc,
     "sswp": make_sswp,
+    "reachability": make_reachability,
     "ppr": make_personalized_pagerank,
     "ms_sssp": make_multi_source_sssp,
 }

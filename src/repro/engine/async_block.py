@@ -21,7 +21,8 @@ been relabeled with the processing order (``AlgoInstance.relabel``), so block
 b covers ordinals [b*bs, (b+1)*bs).
 
 ``backend="pallas"`` runs each sweep as the fused `kernels.gs_sweep` Pallas
-kernel (BSR tiles, one kernel launch per sweep; interpret mode off-TPU)
+kernel (ragged flat-BSR tiles, one kernel launch per sweep; interpret mode
+off-TPU)
 instead of the pure-JAX gather/segment-reduce sweep. Both backends share the
 convergence driver, so they agree on rounds and per-column bookkeeping.
 """
@@ -88,7 +89,7 @@ def _run(
                      "n_real", "interpret", "extrapolate_every"),
 )
 def _run_pallas(
-    cols, tiles, c, x0, fixed, x_start,
+    rowptr, tilecols, tiles, c, x0, fixed, x_start,
     semiring: str, combine: str, bs: int, n_real: int,
     res_kind: str, eps: float, max_iters: int, interpret: bool,
     extrapolate_every: int,
@@ -99,7 +100,7 @@ def _run_pallas(
 
     def sweep(x):
         return gs_sweep_pallas(
-            cols, tiles, c, x0, fixed, x,
+            rowptr, tilecols, tiles, c, x0, fixed, x,
             semiring=semiring, combine=combine, bs=bs, interpret=interpret,
         )
 
@@ -118,7 +119,8 @@ def run_async_block(
     the incremental serving engine's warm starts).
 
     backend: "jax" (gather/segment-reduce sweep) or "pallas" (fused
-    `gs_sweep` kernel per sweep; interpret mode off-TPU, sum/min semirings).
+    `gs_sweep` kernel per sweep over the ragged flat-BSR layout; interpret
+    mode off-TPU; sum/min/max semirings — see kernels/gs_sweep._SUPPORTED).
 
     extrapolate_every: Aitken acceleration period for linear (sum-semiring)
     systems; 0 = off (see `harness.loop`).
@@ -161,8 +163,8 @@ def _run_async_block_pallas(
     ops = pack_algorithm(algo, bs)
     x_start = harness.init_state(np.asarray(ops["x0"]), x_init, algo.n)
     out = _run_pallas(
-        ops["cols"], ops["tiles"], ops["c"], ops["x0"], ops["fixed"],
-        jnp.asarray(x_start),
+        ops["rowptr"], ops["tilecols"], ops["tiles"], ops["c"], ops["x0"],
+        ops["fixed"], jnp.asarray(x_start),
         semiring=ops["semiring"], combine=ops["combine"], bs=bs,
         n_real=algo.n, res_kind=algo.residual, eps=algo.eps,
         max_iters=max_iters, interpret=_auto_interpret(interpret),

@@ -211,6 +211,14 @@ def run_incremental(
     returned state is always in the instances' id space, so serving code
     never sees the ordering.
 
+    Extra ``engine_kw`` are forwarded to the engine, so
+    ``engine="async_block", backend="pallas"`` serves the warm re-run through
+    the fused flat-BSR `gs_sweep` kernel: the sum path's delta system packs
+    like any other "replace" instance (its residual constant rides the ``c``
+    operand), and the min/max paths' warm states enter the kernel through
+    ``x_init`` — including the max-semiring workloads (sswp/reachability) the
+    kernels now implement.
+
     Returns an ordinary :class:`RunResult` whose ``x`` is the new fixpoint
     and whose ``rounds`` / traces are those of the *incremental* run only —
     for sum semirings they describe the delta system, whose per-round changes

@@ -1,19 +1,29 @@
 """Block packing of a (reordered) graph for the TPU engines and kernels.
 
 The TPU adaptation of the paper's asynchronous mode works on contiguous
-*blocks* of the processing order (DESIGN.md §3). Two packings are built here:
+*blocks* of the processing order (DESIGN.md §3). Three packings are built
+here:
 
 * :class:`BlockedInEdges` — per-destination-block padded in-edge lists, used by
   the pure-JAX block Gauss–Seidel engine (`engine/async_block.py`). Gather/
   segment-reduce friendly.
 
-* :class:`BSRMatrix` — block-sparse rows of dense (bs × bs) tiles of the
-  in-adjacency matrix, used by the Pallas kernels (`kernels/bsr_spmm.py`).
-  After GoGraph reordering + community partitioning the matrix is block-
-  concentrated, so the number of tiles per row-block (= DMAs per output tile
-  on TPU) is small; `stats()` reports exactly that locality proxy.
+* :class:`FlatBSRMatrix` — the **ragged flat** block-sparse layout the Pallas
+  kernels (`kernels/gs_sweep.py`, `kernels/bsr_spmm.py`) walk: one dense
+  ``(bs, bs)`` tile per *nonzero* block of the in-adjacency matrix, stored
+  contiguously in CSR-of-tiles form (``tiles[nnz_blocks, bs, bs]`` +
+  scalar-prefetched ``rowptr[nb+1]`` / ``tilecols[nnz_blocks]``). Memory, DMA
+  count, and semiring FLOPs are all ``O(nnz_blocks)`` — the hub row-blocks
+  that GoGraph's HD phase concentrates (paper §IV-A) are paid for once, in
+  their own row, not replicated into every row's padding.
 
-Both packings order edges the same way so engines agree bit-for-bit in tests.
+* :class:`BSRMatrix` — the legacy *dense-padded* BSR layout
+  (``tiles[nb, k_max, bs, bs]``), kept as the comparison baseline: every
+  row-block pads to the global ``k_max``, so on a powerlaw graph the densest
+  (hub) row-block sets the cost of all of them. ``stats()['padding_waste']``
+  reports exactly how much of the tile memory that padding is.
+
+All packings order edges the same way so engines agree bit-for-bit in tests.
 """
 from __future__ import annotations
 
@@ -64,6 +74,7 @@ def pack_in_edges(g: Graph, bs: int) -> BlockedInEdges:
     blk = g.dst // bs
     order = np.argsort(blk, kind="stable")
     src_s, dst_s, w_s = g.src[order], g.dst[order], g.weights[order]
+    blk_s = blk[order]
     counts = np.bincount(blk, minlength=nb)
     e_max = max(1, int(counts.max()) if len(counts) else 1)
     esrc = np.zeros((nb, e_max), dtype=np.int32)
@@ -72,24 +83,98 @@ def pack_in_edges(g: Graph, bs: int) -> BlockedInEdges:
     emask = np.zeros((nb, e_max), dtype=bool)
     offsets = np.zeros(nb + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
-    for i in range(nb):
-        lo, hi = offsets[i], offsets[i + 1]
-        k = hi - lo
-        esrc[i, :k] = src_s[lo:hi]
-        edst[i, :k] = dst_s[lo:hi] - i * bs
-        ew[i, :k] = w_s[lo:hi]
-        emask[i, :k] = True
+    # slot of edge e within its destination block = position after the stable
+    # sort minus the block's first position: one scatter per array, same
+    # (block, slot) <- sorted-edge assignment the per-block loop produced.
+    slot = np.arange(len(blk_s), dtype=np.int64) - offsets[blk_s]
+    esrc[blk_s, slot] = src_s
+    edst[blk_s, slot] = dst_s - blk_s * bs
+    ew[blk_s, slot] = w_s
+    emask[blk_s, slot] = True
     return BlockedInEdges(bs=bs, n=g.n, esrc=esrc, edst=edst, ew=ew, emask=emask)
 
 
 @dataclasses.dataclass
-class BSRMatrix:
-    """Block-sparse in-adjacency: y_blk[i] = reduce_k tiles[i,k] (x_blk[cols[i,k]]).
+class FlatBSRMatrix:
+    """Ragged flat BSR of the in-adjacency: CSR over (bs, bs) tiles.
 
-    tiles[i, k] has layout (dst_local, src_local): row r of tile (i,k) holds the
-    weights of edges into vertex i*bs+r from vertices cols[i,k]*bs + c.
+    For destination block i, tiles ``rowptr[i]..rowptr[i+1]`` hold its
+    nonzero column-blocks in ascending column order:
+
+        y_blk[i] = REDUCE_{t in [rowptr[i], rowptr[i+1])} tiles[t] (x) x_blk[tilecols[t]]
+
+    ``tiles[t]`` has layout (dst_local, src_local). Absent edges *inside* a
+    nonzero tile carry ``fill`` — the semiring's absorbing element (0 for
+    plus_times, +BIG for min_plus, -BIG for max_min) — but there are no
+    padding *tiles*: memory and per-sweep DMAs are O(nnz_blocks), not
+    O(nb * k_max). ``tilerows`` is derived (``repeat`` of the rowptr runs) and
+    carried so `bsr_spmm` can map grid step -> output block without a search.
+
+    Empty graphs keep one never-referenced zero tile (``rowptr`` all zero) so
+    downstream device buffers are never zero-sized; ``nnz_blocks`` reads the
+    real count from ``rowptr[-1]``.
+    """
+
+    bs: int
+    n: int
+    rowptr: np.ndarray    # int32[nb + 1]
+    tilecols: np.ndarray  # int32[max(nnz_blocks, 1)]
+    tilerows: np.ndarray  # int32[max(nnz_blocks, 1)]  (derived)
+    tiles: np.ndarray     # float32[max(nnz_blocks, 1), bs, bs]
+    fill: float
+
+    @property
+    def nb(self) -> int:
+        return self.rowptr.shape[0] - 1
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.rowptr[-1])
+
+    @property
+    def k_max(self) -> int:
+        """Densest row-block — what the dense layout pads *every* row to."""
+        if self.nb == 0:
+            return 1
+        return max(1, int(np.diff(self.rowptr).max()))
+
+    def stats(self) -> dict:
+        """Locality proxies (the TPU analogue of the paper's cache-miss study)
+        plus the layout win over the dense-padded baseline."""
+        per_row = np.diff(self.rowptr)
+        nnz = self.nnz_blocks
+        k_max = self.k_max
+        diag = int(
+            np.count_nonzero(
+                self.tilecols[: nnz] == self.tilerows[: nnz]
+            )
+        )
+        tile_bytes = nnz * self.bs * self.bs * 4
+        dense_tile_bytes = self.nb * k_max * self.bs * self.bs * 4
+        return {
+            "nb": self.nb,
+            "k_max": k_max,
+            "nnz_blocks": nnz,
+            "mean_colblocks_per_rowblock": float(per_row.mean()) if self.nb else 0.0,
+            "max_colblocks_per_rowblock": int(per_row.max()) if self.nb else 0,
+            "diag_fraction": diag / max(1, self.nb),
+            "tile_bytes": tile_bytes,
+            "dense_tile_bytes": dense_tile_bytes,
+            "tile_bytes_saved": dense_tile_bytes - tile_bytes,
+            "padding_waste": 1.0 - nnz / max(1, self.nb * k_max),
+        }
+
+
+@dataclasses.dataclass
+class BSRMatrix:
+    """Dense-padded block-sparse rows (legacy layout, benchmark baseline).
+
+    tiles[i, k] has layout (dst_local, src_local): row r of tile (i,k) holds
+    the weights of edges into vertex i*bs+r from vertices cols[i,k]*bs + c.
     Padding tiles point at column-block 0 with `fill` values so semiring
-    reduction ignores them (0 for plus_times, +inf for min_plus).
+    reduction ignores them (0 for plus_times, +inf for min_plus). Every
+    row-block pays for the global k_max; `stats()['padding_waste']` is the
+    fraction of tile memory that padding is.
     """
 
     bs: int
@@ -111,9 +196,10 @@ class BSRMatrix:
         """Locality proxies (the TPU analogue of the paper's cache-miss study)."""
         nnz_blocks = int(self.colmask.sum())
         per_row = self.colmask.sum(axis=1)
-        diag = 0
-        for i in range(self.nb):
-            diag += int(np.any(self.cols[i][self.colmask[i]] == i))
+        diag = int(np.count_nonzero(
+            np.any((self.cols == np.arange(self.nb)[:, None]) & self.colmask,
+                   axis=1)
+        ))
         return {
             "nb": self.nb,
             "k_max": self.k_max,
@@ -122,37 +208,69 @@ class BSRMatrix:
             "max_colblocks_per_rowblock": int(per_row.max()) if self.nb else 0,
             "diag_fraction": diag / max(1, self.nb),
             "tile_bytes": int(self.tiles.nbytes),
+            "padding_waste": 1.0 - nnz_blocks / max(1, self.nb * self.k_max),
         }
 
 
-def pack_bsr(g: Graph, bs: int, fill: float = 0.0) -> BSRMatrix:
+def _sorted_tile_edges(g: Graph, bs: int):
+    """Edges sorted by (dst block, src block); returns the per-tile grouping
+    shared by the dense and flat packers so both layouts hold bitwise-identical
+    tiles."""
     nb = num_blocks(g.n, bs)
     bi = (g.dst // bs).astype(np.int64)  # row (dst) block
     bk = (g.src // bs).astype(np.int64)  # col (src) block
     key = bi * nb + bk
     order = np.argsort(key, kind="stable")
-    src_s, dst_s, w_s, key_s = g.src[order], g.dst[order], g.weights[order], key[order]
-    uniq, start = np.unique(key_s, return_index=True)
-    start = np.append(start, len(key_s))
+    src_s, dst_s, w_s = g.src[order], g.dst[order], g.weights[order]
+    key_s = key[order]
+    uniq, tile_of_edge = np.unique(key_s, return_inverse=True)
     rows = (uniq // nb).astype(np.int64)
     cols_of = (uniq % nb).astype(np.int64)
+    return nb, src_s, dst_s, w_s, tile_of_edge, rows, cols_of
+
+
+def pack_bsr(g: Graph, bs: int, fill: float = 0.0) -> BSRMatrix:
+    nb, src_s, dst_s, w_s, tile_of_edge, rows, cols_of = _sorted_tile_edges(g, bs)
     per_row = np.bincount(rows, minlength=nb)
     k_max = max(1, int(per_row.max()) if nb else 1)
     cols = np.zeros((nb, k_max), dtype=np.int32)
     colmask = np.zeros((nb, k_max), dtype=bool)
     tiles = np.full((nb, k_max, bs, bs), fill, dtype=np.float32)
-    slot = np.zeros(nb, dtype=np.int64)
-    for t in range(len(uniq)):
-        i, k = rows[t], cols_of[t]
-        s = slot[i]
-        slot[i] += 1
-        cols[i, s] = k
-        colmask[i, s] = True
-        lo, hi = start[t], start[t + 1]
-        r = dst_s[lo:hi] - i * bs
-        c = src_s[lo:hi] - k * bs
-        tiles[i, s, r, c] = w_s[lo:hi]
+    # tiles arrive sorted by (row, col), so a tile's k-slot is its index minus
+    # its row's first tile index — the cumulative-count form of the old
+    # per-tile `slot[i]++` bookkeeping, as scatters.
+    row_start = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(per_row, out=row_start[1:])
+    slot = np.arange(len(rows), dtype=np.int64) - row_start[rows]
+    cols[rows, slot] = cols_of
+    colmask[rows, slot] = True
+    er = rows[tile_of_edge]       # per-edge destination block
+    ec = cols_of[tile_of_edge]    # per-edge source block
+    tiles[er, slot[tile_of_edge], dst_s - er * bs, src_s - ec * bs] = w_s
     return BSRMatrix(bs=bs, n=g.n, cols=cols, colmask=colmask, tiles=tiles, fill=fill)
+
+
+def pack_bsr_flat(g: Graph, bs: int, fill: float = 0.0) -> FlatBSRMatrix:
+    """Pack the in-adjacency into the ragged flat layout the kernels walk.
+
+    Tile memory is ``nnz_blocks * bs * bs * 4`` bytes — proportional to the
+    graph's real block structure, not to ``nb * k_max``.
+    """
+    nb, src_s, dst_s, w_s, tile_of_edge, rows, cols_of = _sorted_tile_edges(g, bs)
+    nnz = len(rows)
+    per_row = np.bincount(rows, minlength=nb)
+    rowptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(per_row, out=rowptr[1:])
+    tiles = np.full((max(1, nnz), bs, bs), fill, dtype=np.float32)
+    er = rows[tile_of_edge]
+    ec = cols_of[tile_of_edge]
+    tiles[tile_of_edge, dst_s - er * bs, src_s - ec * bs] = w_s
+    tilecols = cols_of.astype(np.int32) if nnz else np.zeros(1, np.int32)
+    tilerows = rows.astype(np.int32) if nnz else np.zeros(1, np.int32)
+    return FlatBSRMatrix(
+        bs=bs, n=g.n, rowptr=rowptr.astype(np.int32), tilecols=tilecols,
+        tilerows=tilerows, tiles=tiles, fill=fill,
+    )
 
 
 def pad_state(x: np.ndarray, bs: int, fill=0.0) -> np.ndarray:

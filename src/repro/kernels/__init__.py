@@ -1,12 +1,15 @@
 # Pallas TPU kernels for the paper's compute hot-spot: the per-round vertex
-# update sweep. Two kernels:
+# update sweep. Both walk the ragged flat-BSR layout (graphs.blocked.
+# FlatBSRMatrix: tiles[nnz_blocks, bs, bs] + rowptr/tilecols) so memory, DMA
+# count, and semiring work are O(nnz_blocks), not O(nb * k_max). Two kernels:
 #   bsr_spmm  — one synchronous round as block-sparse-matrix x dense-states
-#               (plus_times on the MXU, min_plus on the VPU)
+#               (plus_times on the MXU; min_plus/max_min/max_times on the VPU)
 #   gs_sweep  — one *asynchronous* block Gauss-Seidel sweep as a single fused
 #               kernel, exploiting the TPU's sequential grid execution so
 #               later blocks consume earlier blocks' freshly written states
-#               (the paper's Eq. 2 at tile granularity)
-# ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
+#               (the paper's Eq. 2 at tile granularity), with double-buffered
+#               gather DMAs hiding fetch latency behind the tile reduction
+# ops.py holds the jit'd wrappers, ref.py the pure-numpy oracles.
 from repro.kernels.ops import bsr_spmm, gs_sweep
 
 __all__ = ["bsr_spmm", "gs_sweep"]

@@ -9,18 +9,41 @@ current-round value — positive edges (p(src) < p(dst)) deliver fresh state,
 negative edges deliver last-round state, with zero host round-trips for the
 whole sweep.
 
-This is the kernel the GoGraph ordering exists to feed: the reordering
-maximizes (a) the number of src-block < dst-block edges (freshness) and
-(b) block-diagonal concentration (fewer DMAs per step; `BSRMatrix.stats()`).
+Data layout (ragged flat BSR, `graphs.blocked.FlatBSRMatrix`): destination
+block i owns tiles ``rowptr[i]..rowptr[i+1]`` of ``tiles[nnz_blocks, bs, bs]``,
+tile t reading source block ``tilecols[t]``. ``rowptr``/``tilecols`` are
+scalar-prefetched so the kernel can compute DMA addresses before compute
+starts. Per-sweep work is O(nnz_blocks) tiles — the hub row-blocks the
+GoGraph HD phase concentrates (paper §IV-A) cost their own row only, instead
+of inflating a global ``k_max`` every row pays for as the old dense-padded
+layout did.
+
+Double buffering: the adjacency tile *and* the gathered source block for tile
+t+1 are DMA'd into the opposite scratch slot while tile t is being reduced,
+so the semiring work hides the gather latency instead of serializing
+``start(); wait()`` per tile. The destination block's previous-round value is
+fetched once at step start and overlaps the whole reduction.
 
 Update rule per destination block i (semiring & combine as in the engines):
 
-    agg  = REDUCE_k  tiles[i,k] (x) x[cols[i,k]]
+    agg  = REDUCE_t  tiles[t] (x) x[tilecols[t]],  t in [rowptr[i], rowptr[i+1])
     newb = combine(c[i], agg, oldb);  newb = fixed ? x0 : newb
     x[i] <- newb
 
-VMEM per step: k_max adjacency tiles are streamed via BlockSpec; the gather
-buffer, accumulator, and const/x0/fixed blocks are (bs, d) scratch/inputs.
+VMEM per step: 2 adjacency tiles (bs, bs) + 7 state blocks (bs, d) — the 2
+double-buffered gathers, the old-block buffer, the accumulator, and the
+const/x0/fixed input blocks. With bs = d = 128 that is 2*64 KiB tiles +
+7*64 KiB state = 576 KiB, independent of k_max (the old layout streamed
+k_max tiles per step, so the hub row set every step's footprint).
+
+Supported (semiring, combine) pairs and their accumulator identities:
+
+    plus_times / replace   acc 0     (PageRank family: c + sum w*x)
+    min_plus   / min_old   acc +BIG  (SSSP/BFS/CC: min(old, c, min x+w))
+    max_min    / max_old   acc -BIG  (SSWP: max(old, c, max min(x, w)))
+    max_times  / max_old   acc -BIG  (reachability: max(old, c, max w*x);
+                                      requires nonnegative states — absent
+                                      in-tile edges contribute w=0 products)
 """
 from __future__ import annotations
 
@@ -31,47 +54,92 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.engine.algorithms import BIG
+from repro.kernels.semirings import ACC_IDENTITY
 
-# semiring/combine pairs the kernel body actually implements: sum-reduce
-# rounds (PageRank family, combine c + agg) and min-plus relaxations
-# (SSSP/BFS/CC, combine min(old, c, agg)).
-_SUPPORTED = {("plus_times", "replace"), ("min_plus", "min_old")}
+# semiring/combine pairs the kernel body implements, with the accumulator
+# identity (kernels.semirings.ACC_IDENTITY) each reduction starts from.
+# Anything else must fail loudly — a wrong identity silently computes
+# garbage shaped like an answer.
+_SUPPORTED = {
+    ("plus_times", "replace"),
+    ("min_plus", "min_old"),
+    ("max_min", "max_old"),
+    ("max_times", "max_old"),
+}
 
 
-def _make_kernel(semiring: str, combine: str, k_max: int, bs: int):
-    def kernel(cols_ref, tiles_ref, c_ref, x0_ref, fixed_ref, x_hbm, x_out,
-               xblk, acc, sem):
+def _reduce_tile(semiring: str, acc_ref, tile, xs):
+    """acc <- acc (reduce) tile (x) xs for one (bs, bs) tile and (bs, d)
+    source block."""
+    if semiring == "plus_times":
+        acc_ref[...] += jnp.dot(tile, xs, preferred_element_type=acc_ref.dtype)
+    elif semiring == "min_plus":
+        part = jnp.min(tile[:, :, None] + xs[None, :, :], axis=1)
+        acc_ref[...] = jnp.minimum(acc_ref[...], part)
+    elif semiring == "max_min":
+        part = jnp.max(jnp.minimum(tile[:, :, None], xs[None, :, :]), axis=1)
+        acc_ref[...] = jnp.maximum(acc_ref[...], part)
+    elif semiring == "max_times":
+        part = jnp.max(tile[:, :, None] * xs[None, :, :], axis=1)
+        acc_ref[...] = jnp.maximum(acc_ref[...], part)
+    else:
+        raise ValueError(semiring)
+
+
+def _make_kernel(semiring: str, combine: str, bs: int):
+    def kernel(rowptr_ref, tilecols_ref, tiles_hbm, c_ref, x0_ref, fixed_ref,
+               x_hbm, x_out, xblk, tblk, oldblk, acc, sem_x, sem_t, sem_o):
         i = pl.program_id(0)
+        lo = rowptr_ref[i]
+        hi = rowptr_ref[i + 1]
 
-        if semiring == "plus_times":
-            acc[...] = jnp.zeros_like(acc)
-        else:
-            acc[...] = jnp.full_like(acc, BIG)
+        acc[...] = jnp.full_like(acc, ACC_IDENTITY[semiring])
 
-        def body(k, _):
-            c = cols_ref[i, k]
-            cp = pltpu.make_async_copy(x_out.at[pl.ds(c * bs, bs)], xblk, sem)
-            cp.start()
-            cp.wait()
-            if semiring == "plus_times":
-                acc[...] += jnp.dot(
-                    tiles_ref[0, k], xblk[...], preferred_element_type=acc.dtype
-                )
-            else:  # min_plus
-                part = jnp.min(
-                    tiles_ref[0, k][:, :, None] + xblk[...][None, :, :], axis=1
-                )
-                acc[...] = jnp.minimum(acc[...], part)
+        def gather(t, slot):
+            # source block for tile t, read from the *aliased output* so
+            # earlier grid steps' writes (this sweep) are visible
+            c = tilecols_ref[t]
+            return pltpu.make_async_copy(
+                x_out.at[pl.ds(c * bs, bs)], xblk.at[slot], sem_x.at[slot]
+            )
+
+        def fetch_tile(t, slot):
+            return pltpu.make_async_copy(
+                tiles_hbm.at[t], tblk.at[slot], sem_t.at[slot]
+            )
+
+        # the destination block's previous-round value: fetched once, its DMA
+        # overlaps the whole tile reduction below
+        old_cp = pltpu.make_async_copy(
+            x_out.at[pl.ds(i * bs, bs)], oldblk, sem_o
+        )
+        old_cp.start()
+
+        # double-buffer warm-up: tile lo's DMAs go into slot 0
+        @pl.when(lo < hi)
+        def _warmup():
+            gather(lo, 0).start()
+            fetch_tile(lo, 0).start()
+
+        def body(t, _):
+            slot = jax.lax.rem(t - lo, 2)
+            nxt = 1 - slot
+
+            # start tile t+1's fetches before blocking on tile t's
+            @pl.when(t + 1 < hi)
+            def _prefetch():
+                gather(t + 1, nxt).start()
+                fetch_tile(t + 1, nxt).start()
+
+            gather(t, slot).wait()
+            fetch_tile(t, slot).wait()
+            _reduce_tile(semiring, acc, tblk[slot], xblk[slot])
             return 0
 
-        jax.lax.fori_loop(0, k_max, body, 0)
+        jax.lax.fori_loop(lo, hi, body, 0)
 
-        # fetch the destination block's previous-round value
-        cp = pltpu.make_async_copy(x_out.at[pl.ds(i * bs, bs)], xblk, sem)
-        cp.start()
-        cp.wait()
-        old = xblk[...]
+        old_cp.wait()
+        old = oldblk[...]
         if combine == "replace":
             new = c_ref[...] + acc[...]
         elif combine == "min_old":
@@ -82,7 +150,7 @@ def _make_kernel(semiring: str, combine: str, k_max: int, bs: int):
             raise ValueError(combine)
         new = jnp.where(fixed_ref[...] != 0, x0_ref[...], new)
         acc[...] = new.astype(acc.dtype)
-        cp = pltpu.make_async_copy(acc, x_out.at[pl.ds(i * bs, bs)], sem)
+        cp = pltpu.make_async_copy(acc, x_out.at[pl.ds(i * bs, bs)], sem_o)
         cp.start()
         cp.wait()
 
@@ -94,58 +162,64 @@ def _make_kernel(semiring: str, combine: str, k_max: int, bs: int):
     static_argnames=("semiring", "combine", "bs", "interpret"),
 )
 def gs_sweep_pallas(
-    cols: jnp.ndarray,    # int32[nb, k_max]
-    tiles: jnp.ndarray,   # f32[nb, k_max, bs, bs]
-    c: jnp.ndarray,       # f32[nb*bs, d]   per-vertex const (broadcast over d)
-    x0: jnp.ndarray,      # f32[nb*bs, d]
-    fixed: jnp.ndarray,   # f32[nb*bs, d]   1.0 where pinned
-    x: jnp.ndarray,       # f32[nb*bs, d]   state (donated; aliased to output)
+    rowptr: jnp.ndarray,    # int32[nb + 1]      scalar-prefetched
+    tilecols: jnp.ndarray,  # int32[nnz_blocks]  scalar-prefetched
+    tiles: jnp.ndarray,     # f32[nnz_blocks, bs, bs]  ragged flat tiles
+    c: jnp.ndarray,         # f32[nb*bs, d]   per-vertex const
+    x0: jnp.ndarray,        # f32[nb*bs, d]
+    fixed: jnp.ndarray,     # f32[nb*bs, d]   1.0 where pinned
+    x: jnp.ndarray,         # f32[nb*bs, d]   state (donated; aliased to output)
     *,
     semiring: str = "plus_times",
     combine: str = "replace",
     bs: int,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    # the accumulator init and tile reduction are only implemented for these
-    # pairs; anything else (e.g. max-semiring "max_old" for SSWP) would start
-    # the accumulator at +BIG — the *min*-semiring identity — and silently
-    # compute garbage. Mirror pack_algorithm's guard (kernels/ops.py) here so
-    # direct kernel callers fail loudly too.
+    # each pair needs its own accumulator identity and reduction; an unknown
+    # pair would start from the wrong identity and silently compute garbage.
+    # Mirror pack_algorithm's guard (kernels/ops.py) here so direct kernel
+    # callers fail loudly too.
     if (semiring, combine) not in _SUPPORTED:
         raise NotImplementedError(
             f"gs_sweep_pallas: unsupported semiring/combine pair "
             f"({semiring!r}, {combine!r}); supported: {sorted(_SUPPORTED)}"
         )
-    nb, k_max = cols.shape
+    nb = rowptr.shape[0] - 1
     n, d = x.shape
     assert n == nb * bs
+    assert tiles.ndim == 3 and tiles.shape[1:] == (bs, bs)
+    assert tilecols.shape[0] == tiles.shape[0]
     # the batched engine (run_async_block(backend="pallas")) feeds real
     # multi-query columns here; all per-vertex operands must carry them
     assert c.shape == x0.shape == fixed.shape == (n, d), (
         c.shape, x0.shape, fixed.shape, (n, d)
     )
-    kernel = _make_kernel(semiring, combine, k_max, bs)
+    kernel = _make_kernel(semiring, combine, bs)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((1, k_max, bs, bs), lambda i, cols_ref: (i, 0, 0, 0)),
-            pl.BlockSpec((bs, d), lambda i, cols_ref: (i, 0)),
-            pl.BlockSpec((bs, d), lambda i, cols_ref: (i, 0)),
-            pl.BlockSpec((bs, d), lambda i, cols_ref: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # ragged tiles, DMA'd manually
+            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),
         ],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[
-            pltpu.VMEM((bs, d), x.dtype),
-            pltpu.VMEM((bs, d), x.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, bs, d), x.dtype),   # xblk: double-buffered gathers
+            pltpu.VMEM((2, bs, bs), x.dtype),  # tblk: double-buffered tiles
+            pltpu.VMEM((bs, d), x.dtype),      # oldblk
+            pltpu.VMEM((bs, d), x.dtype),      # acc
+            pltpu.SemaphoreType.DMA((2,)),     # sem_x
+            pltpu.SemaphoreType.DMA((2,)),     # sem_t
+            pltpu.SemaphoreType.DMA,           # sem_o (old fetch + writeback)
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
-        input_output_aliases={5: 0},  # x (after the prefetch arg) -> output
+        input_output_aliases={6: 0},  # x (after the 2 prefetch args) -> output
         interpret=interpret,
-    )(cols, tiles, c, x0, fixed, x)
+    )(rowptr, tilecols, tiles, c, x0, fixed, x)

@@ -3,9 +3,10 @@
 `interpret=None` auto-selects: real kernel lowering on TPU, interpret mode on
 CPU (this container), so the same call sites work in both worlds. The
 wrappers also provide `pack_algorithm`, which turns an `AlgoInstance` (with
-its transformed edge weights) into kernel-ready BSR operands, and
-`run_async_block_pallas`, a full async engine whose per-sweep work is the
-fused gs_sweep kernel.
+its transformed edge weights) into kernel-ready **ragged flat BSR** operands
+(`graphs.blocked.FlatBSRMatrix`: tiles[nnz_blocks, bs, bs] + rowptr +
+tilecols), and `run_async_block_pallas`, a full async engine whose per-sweep
+work is the fused gs_sweep kernel.
 """
 from __future__ import annotations
 
@@ -13,12 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.algorithms import AlgoInstance, BIG
+from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
-from repro.graphs.blocked import pack_bsr, pad_state, padded_n
+from repro.graphs.blocked import pack_bsr_flat, pad_state, padded_n
 from repro.graphs.graph import Graph
 from repro.kernels.bsr_spmm import bsr_spmm_pallas
 from repro.kernels.gs_sweep import gs_sweep_pallas
+from repro.kernels.semirings import TILE_FILL
 
 
 def _auto_interpret(interpret):
@@ -27,26 +29,29 @@ def _auto_interpret(interpret):
     return interpret
 
 
-def bsr_spmm(cols, tiles, x, *, semiring="plus_times", dj=None, interpret=None):
+def bsr_spmm(rowptr, tilerows, tilecols, tiles, x, *, semiring="plus_times",
+             dj=None, interpret=None):
     bs = tiles.shape[-1]
     d = x.shape[1]
     if dj is None:
-        # min_plus materializes (bs, bs, dj); keep it within ~2 MiB fp32
-        dj = d if semiring == "plus_times" else max(1, min(d, (512 * 1024) // (bs * bs * 4)))
+        # the broadcast semirings materialize (bs, bs, dj); keep within ~2 MiB
+        dj = d if semiring == "plus_times" else max(
+            1, min(d, (512 * 1024) // (bs * bs * 4))
+        )
         while d % dj:
             dj -= 1
     return bsr_spmm_pallas(
-        cols, tiles, x, semiring=semiring, bs=bs, dj=dj,
+        rowptr, tilerows, tilecols, tiles, x, semiring=semiring, bs=bs, dj=dj,
         interpret=_auto_interpret(interpret),
     )
 
 
-def gs_sweep(cols, tiles, c, x0, fixed, x, *, semiring="plus_times",
-             combine="replace", interpret=None):
+def gs_sweep(rowptr, tilecols, tiles, c, x0, fixed, x, *,
+             semiring="plus_times", combine="replace", interpret=None):
     bs = tiles.shape[-1]
     return gs_sweep_pallas(
-        cols, tiles, c, x0, fixed, x, semiring=semiring, combine=combine,
-        bs=bs, interpret=_auto_interpret(interpret),
+        rowptr, tilecols, tiles, c, x0, fixed, x, semiring=semiring,
+        combine=combine, bs=bs, interpret=_auto_interpret(interpret),
     )
 
 
@@ -54,20 +59,35 @@ def gs_sweep(cols, tiles, c, x0, fixed, x, *, semiring="plus_times",
 # AlgoInstance -> kernel operands
 # ---------------------------------------------------------------------------
 
+# (reduce, edge_op) -> kernel semiring; the in-tile fill for absent edges is
+# the shared kernels.semirings.TILE_FILL table (max_times relies on states
+# being nonnegative: a 0-weight product is then never above a real max_old
+# combine's old/c floor).
+_KERNEL_SEMIRING = {
+    ("sum", "mul"): "plus_times",
+    ("min", "add"): "min_plus",
+    ("max", "min"): "max_min",
+    ("max", "mul"): "max_times",
+}
+
+
 def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
-    """Pack an algorithm's graph + vectors into BSR kernel operands.
+    """Pack an algorithm's graph + vectors into flat-BSR kernel operands.
 
     The state is (n_padded, d). ``d`` defaults to the algorithm's own batch
     width ``algo.d`` (batched constructors carry real per-column vectors); a
     larger ``d`` broadcasts a scalar (``algo.d == 1``) instance across the
     batch — the kernel-bench path for filling TPU lanes with copies.
     """
-    semiring = "plus_times" if algo.semiring.reduce == "sum" else "min_plus"
-    if algo.semiring.reduce == "max":
-        raise NotImplementedError("max-semirings: negate and use min_plus")
-    fill = 0.0 if semiring == "plus_times" else float(BIG)
+    key = (algo.semiring.reduce, algo.semiring.edge_op)
+    if key not in _KERNEL_SEMIRING:
+        raise NotImplementedError(
+            f"no kernel semiring for reduce={key[0]!r} edge_op={key[1]!r}; "
+            f"supported: {sorted(_KERNEL_SEMIRING)}"
+        )
+    semiring = _KERNEL_SEMIRING[key]
     g = Graph(algo.n, algo.src, algo.dst, algo.w)
-    bsr = pack_bsr(g, bs, fill=fill)
+    bsr = pack_bsr_flat(g, bs, fill=TILE_FILL[semiring])
     npad = padded_n(algo.n, bs)
     d = algo.d if d is None else d
     if d != algo.d and algo.d != 1:
@@ -83,7 +103,9 @@ def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
     ident = algo.semiring.identity
     x0pad = padm(algo.x0, ident)
     return {
-        "cols": jnp.asarray(bsr.cols),
+        "rowptr": jnp.asarray(bsr.rowptr),
+        "tilecols": jnp.asarray(bsr.tilecols),
+        "tilerows": jnp.asarray(bsr.tilerows),
         "tiles": jnp.asarray(bsr.tiles),
         "c": jnp.asarray(padm(algo.c, algo.c_pad_fill)),
         "x0": jnp.asarray(x0pad),

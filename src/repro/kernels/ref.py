@@ -1,69 +1,101 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+"""Pure-numpy oracles for the Pallas kernels (the allclose ground truth).
+
+Both oracles walk the same ragged flat-BSR layout as the kernels
+(`graphs.blocked.FlatBSRMatrix`) with plain Python loops over row-blocks —
+deliberately the dumbest possible implementation, so tests compare the
+kernels against code whose correctness is visible at a glance. Reductions
+run in the kernels' tile order, which makes min/max semirings bitwise
+comparable (order-free reductions) and plus_times comparable to float
+accumulation-order noise.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.semirings import ACC_IDENTITY
 
 
-
-def ref_bsr_spmm(
-    cols: jnp.ndarray,   # int32[nb, k_max]
-    tiles: jnp.ndarray,  # f32[nb, k_max, bs, bs]
-    x: jnp.ndarray,      # f32[nb*bs, d]
-    semiring: str = "plus_times",
-) -> jnp.ndarray:
-    nb, k_max, bs, _ = tiles.shape
-    d = x.shape[1]
-    xb = x.reshape(nb, bs, d)
-    gathered = xb[cols]  # (nb, k_max, bs, d)
+def _tile_op(semiring: str, tile: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    """One tile's contribution: (bs, bs) tile (x) (bs, d) source block."""
     if semiring == "plus_times":
-        return jnp.einsum("nkrc,nkcd->nrd", tiles, gathered).reshape(nb * bs, d)
+        return tile @ xs
     if semiring == "min_plus":
-        # min over k and over source columns of tile[r, c] + x[c, d]
-        expanded = tiles[..., None] + gathered[:, :, None, :, :]  # (nb,k,bs_r,bs_c,d)
-        return jnp.min(jnp.min(expanded, axis=3), axis=1).reshape(nb * bs, d)
+        # BIG + BIG overflows f32 to +inf — exactly what the kernel computes,
+        # and still the min identity, so the overflow is the correct answer
+        with np.errstate(over="ignore"):
+            return np.min(tile[:, :, None] + xs[None, :, :], axis=1)
+    if semiring == "max_min":
+        return np.max(np.minimum(tile[:, :, None], xs[None, :, :]), axis=1)
+    if semiring == "max_times":
+        return np.max(tile[:, :, None] * xs[None, :, :], axis=1)
     raise ValueError(semiring)
+
+
+def _reduce(semiring: str, acc: np.ndarray, part: np.ndarray) -> np.ndarray:
+    if semiring == "plus_times":
+        return acc + part
+    if semiring == "min_plus":
+        return np.minimum(acc, part)
+    return np.maximum(acc, part)
 
 
 def _combine(kind: str, agg, c, old, fixed, x0):
     if kind == "replace":
         new = c + agg
     elif kind == "min_old":
-        new = jnp.minimum(old, jnp.minimum(c, agg))
+        new = np.minimum(old, np.minimum(c, agg))
     elif kind == "max_old":
-        new = jnp.maximum(old, jnp.maximum(c, agg))
+        new = np.maximum(old, np.maximum(c, agg))
     else:
         raise ValueError(kind)
-    return jnp.where(fixed != 0, x0, new)
+    return np.where(np.asarray(fixed) != 0, x0, new)
+
+
+def ref_bsr_spmm(
+    rowptr, tilecols, tiles, x, semiring: str = "plus_times"
+) -> np.ndarray:
+    """y_blk[i] = REDUCE_{t in [rowptr[i], rowptr[i+1])} tiles[t] (x)
+    x_blk[tilecols[t]]; empty row-blocks yield the reduce identity."""
+    rowptr = np.asarray(rowptr)
+    tilecols = np.asarray(tilecols)
+    tiles = np.asarray(tiles, np.float32)
+    x = np.asarray(x, np.float32)
+    nb = len(rowptr) - 1
+    bs = tiles.shape[-1]
+    d = x.shape[1]
+    y = np.full((nb * bs, d), ACC_IDENTITY[semiring], np.float32)
+    for i in range(nb):
+        acc = np.full((bs, d), ACC_IDENTITY[semiring], np.float32)
+        for t in range(rowptr[i], rowptr[i + 1]):
+            cblk = tilecols[t]
+            xs = x[cblk * bs:(cblk + 1) * bs]
+            acc = _reduce(semiring, acc, _tile_op(semiring, tiles[t], xs))
+        y[i * bs:(i + 1) * bs] = acc
+    return y
 
 
 def ref_gs_sweep(
-    cols: jnp.ndarray,
-    tiles: jnp.ndarray,
-    c: jnp.ndarray,
-    x0: jnp.ndarray,
-    fixed: jnp.ndarray,
-    x: jnp.ndarray,
-    semiring: str = "plus_times",
-    combine: str = "replace",
-) -> jnp.ndarray:
-    """Sequential block sweep with an evolving state vector (pure jnp)."""
-    nb, k_max, bs, _ = tiles.shape
-    d = x.shape[1]
-
-    def body(i, xcur):
-        xb = xcur.reshape(nb, bs, d)
-        gathered = xb[cols[i]]  # (k_max, bs, d)
-        if semiring == "plus_times":
-            agg = jnp.einsum("krc,kcd->rd", tiles[i], gathered)
-        else:
-            expanded = tiles[i][..., None] + gathered[:, None, :, :]
-            agg = jnp.min(jnp.min(expanded, axis=2), axis=0)
-        old = jax.lax.dynamic_slice(xcur, (i * bs, 0), (bs, d))
-        cb = jax.lax.dynamic_slice(c, (i * bs, 0), (bs, d))
-        x0b = jax.lax.dynamic_slice(x0, (i * bs, 0), (bs, d))
-        fb = jax.lax.dynamic_slice(fixed, (i * bs, 0), (bs, d))
-        new = _combine(combine, agg, cb, old, fb, x0b)
-        return jax.lax.dynamic_update_slice(xcur, new.astype(xcur.dtype), (i * bs, 0))
-
-    return jax.lax.fori_loop(0, nb, body, x)
+    rowptr, tilecols, tiles, c, x0, fixed, x,
+    semiring: str = "plus_times", combine: str = "replace",
+) -> np.ndarray:
+    """Sequential block sweep with an evolving state vector: block i's gathers
+    see blocks < i at their THIS-sweep values (Eq. 2 at tile granularity)."""
+    rowptr = np.asarray(rowptr)
+    tilecols = np.asarray(tilecols)
+    tiles = np.asarray(tiles, np.float32)
+    c = np.asarray(c, np.float32)
+    x0 = np.asarray(x0, np.float32)
+    fixed = np.asarray(fixed)
+    xcur = np.array(x, np.float32, copy=True)
+    nb = len(rowptr) - 1
+    bs = tiles.shape[-1]
+    d = xcur.shape[1]
+    for i in range(nb):
+        acc = np.full((bs, d), ACC_IDENTITY[semiring], np.float32)
+        for t in range(rowptr[i], rowptr[i + 1]):
+            cblk = tilecols[t]
+            xs = xcur[cblk * bs:(cblk + 1) * bs]
+            acc = _reduce(semiring, acc, _tile_op(semiring, tiles[t], xs))
+        sl = slice(i * bs, (i + 1) * bs)
+        xcur[sl] = _combine(combine, acc, c[sl], xcur[sl], fixed[sl], x0[sl])
+    return xcur

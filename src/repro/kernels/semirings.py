@@ -1,0 +1,31 @@
+"""The single source of truth for kernel-semiring constants.
+
+Every consumer of the fused semirings — both Pallas kernels, the numpy
+oracles, and `ops.pack_algorithm` — reads these tables instead of restating
+them, so a new semiring (or a corrected identity) cannot leave a kernel and
+its oracle agreeing to disagree about what "empty" reduces to.
+
+ACC_IDENTITY[s]  — the value a reduction accumulator starts from (and what an
+                   in-edge-less vertex aggregates to).
+TILE_FILL[s]     — the value absent edges *inside* a nonzero tile carry; the
+                   semiring's absorbing element under its edge op, except
+                   max_times, whose multiplicative fill 0 is only harmless
+                   for nonnegative states (documented at the constructors).
+"""
+from __future__ import annotations
+
+from repro.engine.algorithms import BIG
+
+ACC_IDENTITY: dict[str, float] = {
+    "plus_times": 0.0,
+    "min_plus": float(BIG),
+    "max_min": float(-BIG),
+    "max_times": float(-BIG),
+}
+
+TILE_FILL: dict[str, float] = {
+    "plus_times": 0.0,
+    "min_plus": float(BIG),
+    "max_min": float(-BIG),
+    "max_times": 0.0,
+}

@@ -3,7 +3,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.graphs import generators as gen
 from repro.graphs.graph import order_to_rank
-from repro.graphs.blocked import pack_in_edges, pack_bsr, num_blocks
+from repro.graphs.blocked import (
+    num_blocks, pack_bsr, pack_bsr_flat, pack_in_edges,
+)
 from repro.graphs import io as gio
 
 
@@ -86,6 +88,49 @@ def test_pack_bsr_matches_dense():
     assert np.allclose(dense, recon)
     stats = bsr.stats()
     assert stats["nnz_blocks"] >= 1
+    assert 0.0 <= stats["padding_waste"] < 1.0
+    assert abs(stats["padding_waste"]
+               - (1 - stats["nnz_blocks"] / (bsr.nb * bsr.k_max))) < 1e-12
+
+
+def test_pack_bsr_flat_matches_dense_layout():
+    """The flat layout holds exactly the dense layout's real tiles, in the
+    same (row, col) order, with no padding tiles."""
+    g = gen.erdos_renyi(100, 3.0, seed=1)
+    gw = gen.with_random_weights(g, seed=2)
+    for bs in (8, 16, 32):
+        dense = pack_bsr(gw, bs, fill=0.5)
+        flat = pack_bsr_flat(gw, bs, fill=0.5)
+        nnz = int(dense.colmask.sum())
+        assert flat.nnz_blocks == nnz
+        assert flat.tiles.shape == (nnz, bs, bs)  # proportional to nnz_blocks
+        np.testing.assert_array_equal(flat.tiles, dense.tiles[dense.colmask])
+        np.testing.assert_array_equal(flat.tilecols, dense.cols[dense.colmask])
+        np.testing.assert_array_equal(
+            flat.tilerows, np.repeat(np.arange(flat.nb), np.diff(flat.rowptr)))
+        per_row = np.diff(flat.rowptr)
+        np.testing.assert_array_equal(per_row, dense.colmask.sum(axis=1))
+        s, sd = flat.stats(), dense.stats()
+        assert s["nnz_blocks"] == sd["nnz_blocks"]
+        assert s["k_max"] == sd["k_max"]
+        assert s["diag_fraction"] == sd["diag_fraction"]
+        assert s["tile_bytes"] == nnz * bs * bs * 4
+        assert s["dense_tile_bytes"] == sd["tile_bytes"]
+        assert s["tile_bytes_saved"] == sd["tile_bytes"] - s["tile_bytes"]
+
+
+def test_pack_bsr_flat_empty_graph():
+    """An edgeless graph packs to rowptr == 0 with one never-referenced pad
+    tile so device buffers are never zero-sized."""
+    from repro.graphs.graph import Graph
+
+    g = Graph(10, np.zeros(0, np.int32), np.zeros(0, np.int32),
+              np.zeros(0, np.float32))
+    flat = pack_bsr_flat(g, 4, fill=3.0)
+    assert flat.nnz_blocks == 0
+    assert flat.tiles.shape == (1, 4, 4)
+    assert np.all(flat.rowptr == 0)
+    assert flat.stats()["padding_waste"] == 1.0
 
 
 def test_io_roundtrip(tmp_path):

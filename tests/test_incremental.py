@@ -396,19 +396,23 @@ def test_incremental_rejects_explicit_extrapolation_on_minmax(graphs):
 
 
 def test_gs_sweep_rejects_unsupported_combos():
-    """The kernel initializes its accumulator for plus_times/min_plus only;
-    a max-semiring request (sswp's "max_old") must fail loudly, not return
-    garbage shaped like an answer."""
+    """Each supported semiring/combine pair has its own accumulator identity;
+    any other pairing (e.g. min_plus with a "replace" combine) must fail
+    loudly, not start from the wrong identity and return garbage shaped like
+    an answer."""
     import jax.numpy as jnp
 
     from repro.kernels.gs_sweep import gs_sweep_pallas
 
     bs = 8
-    cols = jnp.zeros((1, 1), jnp.int32)
-    tiles = jnp.zeros((1, 1, bs, bs), jnp.float32)
+    rowptr = jnp.zeros((2,), jnp.int32)
+    tilecols = jnp.zeros((1,), jnp.int32)
+    tiles = jnp.zeros((1, bs, bs), jnp.float32)
     v = jnp.zeros((bs, 1), jnp.float32)
     for semiring, combine in [("min_plus", "max_old"), ("min_plus", "replace"),
-                              ("plus_times", "max_old")]:
+                              ("plus_times", "max_old"), ("max_min", "min_old"),
+                              ("max_times", "replace")]:
         with pytest.raises(NotImplementedError):
-            gs_sweep_pallas(cols, tiles, v, v, v, v, semiring=semiring,
-                            combine=combine, bs=bs, interpret=True)
+            gs_sweep_pallas(rowptr, tilecols, tiles, v, v, v, v,
+                            semiring=semiring, combine=combine, bs=bs,
+                            interpret=True)
