@@ -37,6 +37,23 @@ class GoGraphConfig:
     seed: int = 0
 
 
+def _scan_best_gap(pe_head: float, delta_per: np.ndarray) -> int:
+    """The ``GetOptVal`` gap scan, vectorized: the paper's per-gap loop
+    walks the candidate's placed neighbors in val order, accumulating the
+    positive-edge count ``pe`` (+w past an in-neighbor, -w past an
+    out-neighbor) and keeping the first gap that *strictly* improves on the
+    head position (paper line 18). The running ``pe`` after each neighbor is
+    a sequential prefix sum seeded with ``pe_head`` — ``np.cumsum`` performs
+    the identical left-to-right f64 additions, so seeding the cumsum with
+    ``pe_head`` reproduces the loop's rounding bitwise — and "first strict
+    improvement over everything before it" is ``argmax`` (first occurrence
+    of the max) guarded by ``max > pe_head``. Returns the best gap index, or
+    -1 for the head position."""
+    cum = np.cumsum(np.concatenate(([pe_head], delta_per)))[1:]
+    best = cum.max()
+    return int(np.argmax(cum)) if best > pe_head else -1
+
+
 class _Inserter:
     """Incremental M-maximizing insertion (the paper's ``GetOptVal``).
 
@@ -45,6 +62,10 @@ class _Inserter:
     updating the positive-edge count pe incrementally (+w when passing an
     in-neighbor, -w when passing an out-neighbor), and assigns the candidate
     the val of the best gap. Head/tail positions use global min-1 / max+1.
+    The scan itself is the vectorized `_scan_best_gap` prefix sum
+    (bitwise-identical to the sequential loop it replaced), so insertion
+    cost is sort-dominated O(deg log deg) numpy work, not a Python loop
+    per gap.
     """
 
     def __init__(self, n: int):
@@ -116,13 +137,7 @@ class _Inserter:
         delta_per = delta_per[order]
 
         pe = float(wout.sum())  # head position: all out-edges positive
-        best_pe = pe
-        best_idx = -1           # -1 = before the first neighbor
-        for i in range(len(uniq)):
-            pe += delta_per[i]
-            if pe > best_pe:    # paper line 18: strict improvement
-                best_pe = pe
-                best_idx = i
+        best_idx = _scan_best_gap(pe, delta_per)  # -1 = before first neighbor
 
         if best_idx == -1:
             self._min -= 1.0

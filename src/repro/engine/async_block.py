@@ -20,11 +20,17 @@ plain blocked sweep. The engine assumes the algorithm instance has already
 been relabeled with the processing order (``AlgoInstance.relabel``), so block
 b covers ordinals [b*bs, (b+1)*bs).
 
-``backend="pallas"`` runs each sweep as the fused `kernels.gs_sweep` Pallas
-kernel (ragged flat-BSR tiles, one kernel launch per sweep; interpret mode
-off-TPU)
-instead of the pure-JAX gather/segment-reduce sweep. Both backends share the
-convergence driver, so they agree on rounds and per-column bookkeeping.
+``backend="pallas"`` runs sweeps through the fused `kernels.gs_sweep` Pallas
+kernel (ragged flat-BSR tiles; interpret mode off-TPU) instead of the
+pure-JAX gather/segment-reduce sweep. With ``sweeps_per_call=1`` (default)
+each sweep is its own kernel launch and the per-sweep driver
+(`harness.loop`) keeps the exact per-column freezing semantics; with
+``sweeps_per_call=R > 1`` the persistent multi-sweep megakernel executes up
+to R sweeps per launch with in-kernel convergence, early-out, and
+active-frontier block skipping, and the host checks convergence once per
+batch (`harness.sweep_batched_loop`). ``frontier`` optionally seeds the
+dirty bitmap from a vertex mask (warm starts whose untouched blocks are
+already self-consistent — see `engine.incremental`).
 """
 from __future__ import annotations
 
@@ -113,7 +119,8 @@ def _run_pallas(
 def run_async_block(
     algo: AlgoInstance, bs: int = 256, max_iters: int = 2000, inner: int = 1,
     x_init: np.ndarray | None = None, backend: str = "jax",
-    extrapolate_every: int = 0,
+    extrapolate_every: int = 0, sweeps_per_call: int = 1,
+    frontier: np.ndarray | None = None,
 ) -> RunResult:
     """x_init: resume from a previous state (checkpointed macro-stepping or
     the incremental serving engine's warm starts).
@@ -124,15 +131,31 @@ def run_async_block(
 
     extrapolate_every: Aitken acceleration period for linear (sum-semiring)
     systems; 0 = off (see `harness.loop`).
+
+    sweeps_per_call (pallas backend): sweeps batched into one persistent
+    megakernel launch; >1 trades per-sweep host convergence checks (and
+    per-column state freezing — see `harness.sweep_batched_loop`) for one
+    check per batch plus in-kernel early-out and frontier skipping.
+
+    frontier (pallas backend, bool[n]): vertex-level dirty seed for the
+    megakernel's active-frontier path. A vertex outside the frontier claims
+    its block's state already satisfies its update equation; None = all
+    dirty (the only safe cold-start value).
     """
     harness.check_extrapolation(algo, extrapolate_every)
     if backend == "pallas":
         return _run_async_block_pallas(
             algo, bs, max_iters, inner, x_init,
             extrapolate_every=extrapolate_every,
+            sweeps_per_call=sweeps_per_call, frontier=frontier,
         )
     if backend != "jax":
         raise ValueError(f"unknown backend {backend!r}")
+    if sweeps_per_call != 1 or frontier is not None:
+        raise ValueError(
+            "sweeps_per_call/frontier amortize kernel launches and DMAs — "
+            "pallas-backend knobs; backend='jax' supports neither"
+        )
     be, x0, c, fixed, npad = harness.pack(algo, bs)
     x_start = harness.init_state(x0, x_init, algo.n)
     out = _run(
@@ -154,20 +177,56 @@ def run_async_block(
 
 
 def _run_async_block_pallas(
-    algo, bs, max_iters, inner, x_init, interpret=None, extrapolate_every=0
+    algo, bs, max_iters, inner, x_init, interpret=None, extrapolate_every=0,
+    sweeps_per_call=1, frontier=None,
 ) -> RunResult:
     from repro.kernels.ops import _auto_interpret, pack_algorithm
 
     if inner != 1:
         raise ValueError("backend='pallas' runs the fused sweep; inner must be 1")
+    if sweeps_per_call < 1:
+        raise ValueError(f"sweeps_per_call must be >= 1, got {sweeps_per_call}")
     ops = pack_algorithm(algo, bs)
     x_start = harness.init_state(np.asarray(ops["x0"]), x_init, algo.n)
-    out = _run_pallas(
-        ops["rowptr"], ops["tilecols"], ops["tiles"], ops["c"], ops["x0"],
-        ops["fixed"], jnp.asarray(x_start),
-        semiring=ops["semiring"], combine=ops["combine"], bs=bs,
-        n_real=algo.n, res_kind=algo.residual, eps=algo.eps,
-        max_iters=max_iters, interpret=_auto_interpret(interpret),
-        extrapolate_every=extrapolate_every,
+    if sweeps_per_call == 1 and frontier is None:
+        out = _run_pallas(
+            ops["rowptr"], ops["tilecols"], ops["tiles"], ops["c"], ops["x0"],
+            ops["fixed"], jnp.asarray(x_start),
+            semiring=ops["semiring"], combine=ops["combine"], bs=bs,
+            n_real=algo.n, res_kind=algo.residual, eps=algo.eps,
+            max_iters=max_iters, interpret=_auto_interpret(interpret),
+            extrapolate_every=extrapolate_every,
+        )
+        return harness.finalize(algo, *out)
+    # sweep-batched megakernel path: host checks once per batch, so the
+    # per-round Aitken bookkeeping of harness.loop has nothing to hook into
+    if extrapolate_every:
+        raise NotImplementedError(
+            "extrapolate_every needs per-sweep host control; "
+            "use sweeps_per_call=1"
+        )
+    from repro.graphs.blocked import frontier_blocks
+    from repro.kernels.gs_sweep import gs_multisweep_pallas
+
+    nb = int(ops["rowptr"].shape[0]) - 1
+    dirty0 = jnp.asarray(frontier_blocks(frontier, algo.n, bs))
+    interp = _auto_interpret(interpret)
+
+    def batch_fn(x, dirty):
+        return gs_multisweep_pallas(
+            ops["rowptr"], ops["tilecols"], ops["revptr"], ops["revrows"],
+            dirty, ops["tiles"], ops["c"], ops["x0"], ops["fixed"], x,
+            semiring=ops["semiring"], combine=ops["combine"],
+            res_kind=algo.residual, bs=bs, sweeps=sweeps_per_call,
+            eps=float(algo.eps), interpret=interp,
+        )
+
+    real_mask = np.arange(x_start.shape[0]) < algo.n
+    out = harness.sweep_batched_loop(
+        batch_fn, jnp.asarray(x_start), dirty0,
+        eps=algo.eps, max_iters=max_iters, sweeps=sweeps_per_call, nb=nb,
+        real_mask=real_mask,
     )
-    return harness.finalize(algo, *out)
+    res = harness.finalize(algo, *out[:6])
+    res.active_block_fraction = out[6]
+    return res

@@ -35,6 +35,10 @@ class RunResult:
     state_sums: np.ndarray  # per-round sum(x) (for Fig. 7 convergence plots)
     col_rounds: Optional[np.ndarray] = None    # int32[d]
     col_converged: Optional[np.ndarray] = None  # bool[d]
+    # sweep-batched megakernel runs only (run_async_block(backend="pallas",
+    # sweeps_per_call>1)): fraction of row-blocks actually updated per sweep
+    # — the frontier-skipping win (1.0 = full sweep, 0.0 = everything clean)
+    active_block_fraction: Optional[np.ndarray] = None  # f32[rounds]
 
     @property
     def d(self) -> int:

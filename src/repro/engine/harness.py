@@ -190,6 +190,79 @@ def loop(
     return jax.lax.while_loop(cond, body, init)
 
 
+def sweep_batched_loop(
+    batch_fn: Callable,
+    x0: jnp.ndarray,
+    dirty0: jnp.ndarray,
+    *,
+    eps: float,
+    max_iters: int,
+    sweeps: int,
+    nb: int,
+    real_mask: Optional[np.ndarray] = None,
+):
+    """Host-side round driver for the persistent multi-sweep megakernel.
+
+    ``batch_fn(x, dirty) -> (x, deltas[sweeps, d], active[sweeps, 1],
+    dirty)`` runs up to ``sweeps`` Gauss–Seidel sweeps in one kernel launch
+    (`kernels.gs_sweep.gs_multisweep_pallas`); this loop synchronizes with
+    the host once per *batch*, then replays the kernel's per-sweep delta
+    trace to reconstruct exactly the per-column round counts the per-sweep
+    driver (:func:`loop`) would have produced: column j converges at the
+    first sweep whose delta drops to eps, and skipped blocks contribute a
+    bitwise-zero delta, so the trace is identical to full-sweep execution.
+
+    Two documented deviations from :func:`loop`'s semantics, both invisible
+    for the lattice (min/max) semirings where converged states are bitwise
+    fixpoints of the sweep: (1) columns are not frozen at their pre-sweep
+    state — a converged column keeps sweeping until the whole batch stops,
+    drifting by at most eps per sweep for contractive sum systems; (2) the
+    kernel's in-batch early-out uses the instantaneous all-columns test, so
+    a batch may execute up to ``sweeps - 1`` extra sweeps past ``max_iters``
+    or past the sticky per-column stop (their results are kept).
+
+    Returns ``(x, k, col_done, col_rounds, res_trace, sum_trace,
+    active_trace)`` — the :func:`loop` tuple shape plus the per-sweep
+    active-block-fraction trace (``state_sums`` has batch granularity: the
+    post-batch sum is attributed to each of the batch's sweeps).
+    """
+    x = x0
+    dirty = dirty0
+    d = int(x.shape[1])
+    rm = None if real_mask is None else jnp.asarray(real_mask)
+    col_done = np.zeros(d, bool)
+    col_rounds = np.zeros(d, np.int32)
+    res_trace: list[float] = []
+    sum_trace: list[float] = []
+    act_trace: list[float] = []
+    k = 0
+    while k < max_iters and not col_done.all():
+        x, deltas, active, dirty = batch_fn(x, dirty)
+        deltas_np = np.asarray(deltas)
+        active_np = np.asarray(active)
+        # state-sum trace on device: the batch only ships the (sweeps, d)
+        # delta/active rows and this one scalar to the host, never the state
+        xm = x if rm is None else jnp.where(rm[:, None], x, 0.0)
+        batch_sum = float(jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0)))
+        for s in range(sweeps):
+            if k >= max_iters or col_done.all():
+                break
+            res_col = deltas_np[s]
+            active_cols = ~col_done
+            newly = active_cols & (res_col <= eps)
+            col_rounds += active_cols.astype(np.int32)
+            res_trace.append(float(np.max(np.where(active_cols, res_col, 0.0))))
+            sum_trace.append(batch_sum)
+            act_trace.append(float(active_np[s, 0]) / max(1, nb))
+            col_done |= newly
+            k += 1
+    return (
+        x, k, col_done, col_rounds,
+        np.asarray(res_trace, np.float32), np.asarray(sum_trace, np.float32),
+        np.asarray(act_trace, np.float32),
+    )
+
+
 def finalize(
     algo: AlgoInstance, x, k, col_done, col_rounds, res_buf, sum_buf, *_extra
 ) -> RunResult:

@@ -217,7 +217,16 @@ def run_incremental(
     like any other "replace" instance (its residual constant rides the ``c``
     operand), and the min/max paths' warm states enter the kernel through
     ``x_init`` — including the max-semiring workloads (sswp/reachability) the
-    kernels now implement.
+    kernels now implement. Adding ``sweeps_per_call=R`` batches R sweeps per
+    persistent megakernel launch, and this function then also seeds the
+    kernel's active frontier with exactly the delta-touched blocks: for sum
+    semirings the rows where the dense residual is nonzero (everything else
+    solves the delta system at its 0 start bitwise), for min/max the
+    destinations of mutated edges, the masked recompute region, and the
+    appended vertices (every other block's warm value stays self-consistent
+    under the monotone combine, so skipping it until a neighbor moves is a
+    bitwise no-op). An explicit ``frontier=`` in ``engine_kw`` overrides the
+    seeding.
 
     Returns an ordinary :class:`RunResult` whose ``x`` is the new fixpoint
     and whose ``rounds`` / traces are those of the *incremental* run only —
@@ -233,13 +242,25 @@ def run_incremental(
     if rank is not None:
         rank = np.asarray(rank)
 
+    # seed the megakernel's active frontier from the delta-touched blocks
+    # when the caller asked for sweep batching and didn't pin one themselves
+    seed_frontier = (
+        engine == "async_block"
+        and engine_kw.get("backend") == "pallas"
+        and int(engine_kw.get("sweeps_per_call", 1)) > 1
+        and "frontier" not in engine_kw
+    )
+
     def _run_relabeled(algo, x_init):
         """Run `algo` under `rank` (or directly), returning id-space x."""
+        kw = dict(run_kw)
         if rank is None:
-            return _dispatch(engine, algo, x_init=x_init, **run_kw)
+            return _dispatch(engine, algo, x_init=x_init, **kw)
+        if kw.get("frontier") is not None:
+            kw["frontier"] = permute_state(kw["frontier"], rank)
         res = _dispatch(engine, algo.relabel(rank),
                         x_init=None if x_init is None
-                        else permute_state(x_init, rank), **run_kw)
+                        else permute_state(x_init, rank), **kw)
         x = np.asarray(res.x).reshape(algo.n, -1)[rank]
         if algo.d == 1:
             x = x[:, 0]
@@ -247,9 +268,18 @@ def run_incremental(
 
     if algo_new.semiring.reduce == "sum":
         if extrapolate_every is None:
-            extrapolate_every = DEFAULT_EXTRAPOLATE_EVERY
+            # Aitken needs per-sweep host control; the sweep-batched driver
+            # only syncs per batch, so it runs unaccelerated
+            extrapolate_every = (
+                0 if int(engine_kw.get("sweeps_per_call", 1)) > 1
+                else DEFAULT_EXTRAPOLATE_EVERY
+            )
         run_kw = dict(engine_kw, extrapolate_every=extrapolate_every)
         r = dense_residual(algo_new, x_warm)
+        if seed_frontier:
+            # the delta system starts at 0: any block with an all-zero
+            # residual already satisfies its equation bitwise at that start
+            run_kw["frontier"] = np.any(r != 0, axis=1)
         delta_algo = dataclasses.replace(
             algo_new,
             x0=np.zeros_like(x_warm),
@@ -272,10 +302,22 @@ def run_incremental(
     check_extrapolation(algo_new, extrapolate_every or 0)
     run_kw = dict(engine_kw, extrapolate_every=0)
     diff = instance_edge_diff(algo_old, algo_new)
+    region = None
     if diff.loosening:
         seeds = np.concatenate([diff.removed_dst, diff.loosened_dst])
         region = affected_region(algo_new, seeds)
         x_warm = np.where(region[:, None], algo_new.x0, x_warm)
+    if seed_frontier:
+        # every warm block outside this set is the old fixpoint fed unchanged
+        # in-edges, so its recompute is a bitwise no-op until a neighbor moves
+        verts = np.zeros(algo_new.n, bool)
+        for dsts in (diff.added_dst, diff.removed_dst,
+                     diff.tightened_dst, diff.loosened_dst):
+            verts[dsts] = True
+        verts[algo_old.n:] = True  # appended vertices start at x0
+        if region is not None:
+            verts |= region
+        run_kw["frontier"] = verts
     return _run_relabeled(algo_new, x_warm)
 
 

@@ -71,14 +71,12 @@ def residual(kind: str, x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
 def residual_cols(kind: str, x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
     """Per-column residual f32[d] for (n, d) states — the convergence unit of
     the batched engines: a column (query) that drops below eps is frozen and
-    stops contributing to the stopping test."""
-    if kind == "linf":
-        return jnp.max(jnp.abs(x_new - x_old), axis=0)
-    if kind == "l1":
-        return jnp.sum(jnp.abs(x_new - x_old), axis=0)
-    if kind == "changed":
-        return jnp.sum((x_new != x_old).astype(jnp.float32), axis=0)
-    raise ValueError(kind)
+    stops contributing to the stopping test. Delegates to the shared metric
+    definition (`kernels.semirings.delta_cols`) so the host drivers, the
+    multisweep megakernel, and the numpy oracle can never disagree."""
+    from repro.kernels.semirings import delta_cols
+
+    return delta_cols(kind, x_new, x_old, xp=jnp)
 
 
 def device_arrays(algo: AlgoInstance) -> dict[str, jnp.ndarray]:

@@ -6,10 +6,13 @@ wasted work. At block granularity this becomes: per scheduling round, select
 the top-k blocks by accumulated priority and update only those.
 
 Priority bookkeeping is done on the block dependency graph (derived from the
-same BSR packing the kernels use): when block i's state moves by |delta_i|,
-every dependent block j (one with edges i -> j) inherits priority mass
-``D[j, i] * |delta_i|``, where D is the dense block-adjacency indicator —
-an (nb x nb) matmul per round, negligible next to the block updates.
+same block structure the kernels use): when block i's state moves by
+|delta_i|, every dependent block j (one with edges i -> j) inherits priority
+mass |delta_i|. The dependency graph is the O(nnz_blocks) block-CSR
+skeleton from `graphs.blocked.block_dependency_structure` — one
+scatter-add over its (dst block, src block) pairs per scheduling round —
+replacing the old dense (nb, nb) indicator whose memory and per-round
+matmul work were both quadratic in nb.
 
 States are batched ``f32[n, d]`` like the other engines (shared pack path in
 `engine.harness`); a block's priority is its state motion summed over all d
@@ -37,13 +40,19 @@ from repro.engine import harness
 from repro.engine import jax_ops as J
 
 
-def _block_dependency(algo: AlgoInstance, bs: int, nb: int) -> np.ndarray:
-    """D[j, i] = 1 iff an edge runs from block i into block j."""
-    bi = np.minimum(algo.dst // bs, nb - 1)
-    bk = np.minimum(algo.src // bs, nb - 1)
-    D = np.zeros((nb, nb), np.float32)
-    D[bi, bk] = 1.0
-    return D
+def _block_dependency(
+    algo: AlgoInstance, bs: int, nb: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Unique (dst block, src block) dependency pairs: ``dep_dst[t]``
+    depends on ``dep_src[t]`` (an edge runs src-block -> dst-block). The
+    block-CSR skeleton shared with the kernel packers — O(nnz_blocks), not
+    the dense O(nb^2) indicator."""
+    from repro.graphs.blocked import block_dependency_structure
+
+    _, dep_dst, dep_src = block_dependency_structure(
+        algo.src, algo.dst, algo.n, bs
+    )
+    return dep_dst, dep_src
 
 
 @partial(
@@ -52,7 +61,7 @@ def _block_dependency(algo: AlgoInstance, bs: int, nb: int) -> np.ndarray:
                      "comb", "res_kind", "max_rounds"),
 )
 def _run(
-    esrc, edst, ew, emask, x0, c, fixed, dep,
+    esrc, edst, ew, emask, x0, c, fixed, dep_dst, dep_src,
     bs: int, nb: int, k_sel: int, n_real: int,
     sem_reduce: str, sem_edge: str, comb: str, res_kind: str,
     eps: float, max_rounds: int, identity: float,
@@ -85,10 +94,12 @@ def _run(
         x_new, deltas = jax.lax.fori_loop(
             0, k_sel, body, (x, jnp.zeros((k_sel,), jnp.float32))
         )
-        # processed blocks hand their priority to dependents
+        # processed blocks hand their priority to dependents: one
+        # scatter-add over the O(nnz_blocks) dependency pairs (delta_vec is
+        # nonzero only at the selected blocks, so untouched pairs add 0)
         delta_vec = jnp.zeros((nb,), jnp.float32).at[sel].set(deltas)
         prio = prio.at[sel].set(0.0)
-        prio = prio + dep @ delta_vec
+        prio = prio.at[dep_dst].add(delta_vec[dep_src])
         # stop only when this round moved nothing AND no pending priority
         # remains anywhere (selected-quiet != converged)
         res = jnp.maximum(jnp.sum(delta_vec), jnp.max(prio))
@@ -120,7 +131,7 @@ def run_priority_block(
     be, x0, c, fixed, npad = harness.pack(algo, bs)
     nb = be.nb
     k_sel = max(1, int(round(nb * select_frac)))
-    dep = _block_dependency(algo, bs, nb)
+    dep_dst, dep_src = _block_dependency(algo, bs, nb)
     # priority scheduling needs an accumulated-change signal; for "changed"
     # algorithms (SSSP/BFS/CC) the L1 delta works identically. The threshold
     # is NOT scaled by d: total mass <= eps bounds every column's mass, so a
@@ -129,7 +140,7 @@ def run_priority_block(
     x, k, res, tot = _run(
         jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
         jnp.asarray(be.emask), jnp.asarray(x0), jnp.asarray(c),
-        jnp.asarray(fixed), jnp.asarray(dep),
+        jnp.asarray(fixed), jnp.asarray(dep_dst), jnp.asarray(dep_src),
         bs=bs, nb=nb, k_sel=k_sel, n_real=algo.n,
         sem_reduce=algo.semiring.reduce, sem_edge=algo.semiring.edge_op,
         comb=algo.combine, res_kind=algo.residual,

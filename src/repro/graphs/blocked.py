@@ -138,6 +138,14 @@ class FlatBSRMatrix:
             return 1
         return max(1, int(np.diff(self.rowptr).max()))
 
+    def reverse_deps(self) -> tuple[np.ndarray, np.ndarray]:
+        """Block reverse-dependency CSR: for *source* block j,
+        ``revrows[revptr[j]:revptr[j+1]]`` lists the destination blocks that
+        own a tile reading j — the set of blocks whose next update can change
+        when j's state moves. This is what the frontier megakernel
+        (`kernels.gs_sweep`) walks to re-mark dependents dirty."""
+        return block_reverse_deps(self.rowptr, self.tilecols)
+
     def stats(self) -> dict:
         """Locality proxies (the TPU analogue of the paper's cache-miss study)
         plus the layout win over the dense-padded baseline."""
@@ -271,6 +279,65 @@ def pack_bsr_flat(g: Graph, bs: int, fill: float = 0.0) -> FlatBSRMatrix:
         bs=bs, n=g.n, rowptr=rowptr.astype(np.int32), tilecols=tilecols,
         tilerows=tilerows, tiles=tiles, fill=fill,
     )
+
+
+def block_reverse_deps(
+    rowptr: np.ndarray, tilecols: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """CSC of the tile structure: ``(revptr[nb+1], revrows)`` where source
+    (column) block j's dependents — the destination (row) blocks holding a
+    tile that reads j — are ``revrows[revptr[j]:revptr[j+1]]``, in ascending
+    row order. O(nnz_blocks) memory; the empty structure keeps one
+    never-referenced zero entry so device buffers are never zero-sized
+    (mirrors `FlatBSRMatrix.tilecols`)."""
+    rowptr = np.asarray(rowptr)
+    nb = len(rowptr) - 1
+    nnz = int(rowptr[-1])
+    cols = np.asarray(tilecols)[:nnz]
+    rows = np.repeat(np.arange(nb, dtype=np.int32), np.diff(rowptr))
+    order = np.argsort(cols, kind="stable")
+    revrows = rows[order].astype(np.int32) if nnz else np.zeros(1, np.int32)
+    revptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(np.bincount(cols, minlength=nb), out=revptr[1:])
+    return revptr.astype(np.int32), revrows
+
+
+def block_dependency_structure(
+    src: np.ndarray, dst: np.ndarray, n: int, bs: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The nonzero block structure only — ``(rowptr, tilerows, tilecols)``
+    over unique (dst block, src block) pairs, no tile payloads. This is the
+    O(nnz_blocks) skeleton the priority scheduler propagates deltas over
+    (``prio[tilerows] += delta[tilecols]``) instead of a dense (nb, nb)
+    indicator matmul."""
+    nb = num_blocks(n, bs)
+    key = (np.asarray(dst, np.int64) // bs) * nb + (np.asarray(src, np.int64) // bs)
+    uniq = np.unique(key)
+    rows = (uniq // nb).astype(np.int32)
+    cols = (uniq % nb).astype(np.int32)
+    rowptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=nb), out=rowptr[1:])
+    return rowptr.astype(np.int32), rows, cols
+
+
+def frontier_blocks(frontier, n: int, bs: int) -> np.ndarray:
+    """Pack a vertex-level dirty mask into the per-row-block bitmap the
+    megakernel's frontier consumes: block i is dirty iff any of its vertices
+    is. ``frontier=None`` (cold start / no self-consistency claim) marks
+    every block dirty — the only always-safe default, since a clean block is
+    a *contract* that its current state already satisfies its update
+    equation."""
+    nb = num_blocks(n, bs)
+    if frontier is None:
+        return np.ones(nb, np.int32)
+    f = np.asarray(frontier)
+    if f.shape != (n,):
+        raise ValueError(
+            f"frontier must be a vertex-level mask of shape ({n},), got {f.shape}"
+        )
+    fp = np.zeros(nb * bs, bool)
+    fp[:n] = f != 0
+    return fp.reshape(nb, bs).any(axis=1).astype(np.int32)
 
 
 def pad_state(x: np.ndarray, bs: int, fill=0.0) -> np.ndarray:

@@ -1,28 +1,51 @@
-"""Fused block Gauss–Seidel sweep — the paper's async mode as ONE kernel.
+"""Persistent multi-sweep block Gauss–Seidel megakernel.
 
-TPU Pallas grids execute sequentially, which is exactly the ordering
-guarantee the paper's Eq. 2 needs: grid step i updates destination block i and
-*writes it back to the state buffer before step i+1 runs*. The state lives in
-HBM (`pl.ANY`) and is aliased input->output, so column-block gathers issued by
-later steps (explicit `make_async_copy` DMAs) observe every earlier block's
-current-round value — positive edges (p(src) < p(dst)) deliver fresh state,
-negative edges deliver last-round state, with zero host round-trips for the
-whole sweep.
+The paper's reordering cuts *rounds*; this kernel removes the fixed
+per-round tax that reordering cannot touch. One ``pallas_call`` now executes
+up to ``sweeps`` Gauss–Seidel sweeps over a 2-D grid ``(sweeps, nb)`` — TPU
+grids run sequentially with the sweep dimension outermost, so the state stays
+resident in HBM (aliased input->output) across the whole batch and the host
+checks convergence once per *batch* instead of once per sweep. Three fused
+mechanisms make per-round cost proportional to remaining work:
 
-Data layout (ragged flat BSR, `graphs.blocked.FlatBSRMatrix`): destination
-block i owns tiles ``rowptr[i]..rowptr[i+1]`` of ``tiles[nnz_blocks, bs, bs]``,
-tile t reading source block ``tilecols[t]``. ``rowptr``/``tilecols`` are
-scalar-prefetched so the kernel can compute DMA addresses before compute
-starts. Per-sweep work is O(nnz_blocks) tiles — the hub row-blocks the
-GoGraph HD phase concentrates (paper §IV-A) cost their own row only, instead
-of inflating a global ``k_max`` every row pays for as the old dense-padded
-layout did.
+* **In-kernel convergence.** Every block update folds its per-column delta
+  (``kernels.semirings.DELTA_METRIC``: max-|residual| for the plus semiring,
+  changed-entry count for the lattice semirings — the same metrics the host
+  drivers threshold) into a VMEM accumulator; the end of each sweep writes
+  the accumulated ``(1, d)`` row into the ``deltas[sweeps, d]`` output and
+  sets an SMEM ``done`` flag once all columns drop to ``eps``.
 
-Double buffering: the adjacency tile *and* the gathered source block for tile
-t+1 are DMA'd into the opposite scratch slot while tile t is being reduced,
-so the semiring work hides the gather latency instead of serializing
-``start(); wait()`` per tile. The destination block's previous-round value is
-fetched once at step start and overlaps the whole reduction.
+* **Early-out.** Once ``done`` is set, the remaining grid steps are
+  predicated no-ops: no gather DMAs, no tile DMAs, no reduction — the
+  leftover sweeps of the batch cost grid bookkeeping only, and their delta
+  rows report 0.
+
+* **Active-frontier block skipping.** A per-row-block dirty bitmap (SMEM,
+  seeded from the ``dirty`` input, exported to the ``dirty_out`` output so
+  the next batch resumes the frontier) gates each block update behind
+  ``@pl.when``: a block whose in-neighbor blocks all held still since its
+  last update is skipped with zero HBM traffic. When an update *changes* a
+  block (bitwise — any entry, any column), its dependents — read from the
+  block reverse-dependency CSR ``revptr``/``revrows``
+  (`graphs.blocked.FlatBSRMatrix.reverse_deps`) — are re-marked dirty:
+  blocks later in this sweep see the mark immediately (Gauss–Seidel
+  freshness at frontier granularity), earlier blocks next sweep. Because a
+  clean block's recompute is bitwise a no-op by construction, frontier
+  execution is **bitwise-equivalent** to full sweeps, per sweep, per column.
+
+The frontier contract: a clean (``dirty == 0``) block asserts that its
+current state already satisfies its update equation. Cold starts must
+therefore seed all-dirty (``graphs.blocked.frontier_blocks(None, ...)``);
+warm starts may seed only the delta-touched blocks (see
+``engine.incremental``) because monotone combines keep every untouched
+block self-consistent.
+
+Data layout is the ragged flat BSR of `graphs.blocked.FlatBSRMatrix`
+(tiles[nnz_blocks, bs, bs] + scalar-prefetched rowptr/tilecols), walked with
+the double-buffered gather+tile DMA pipeline: tile t+1's adjacency tile and
+gathered source block stream into the opposite scratch slot while tile t
+reduces, and the destination block's previous-round fetch overlaps the whole
+reduction.
 
 Update rule per destination block i (semiring & combine as in the engines):
 
@@ -30,11 +53,9 @@ Update rule per destination block i (semiring & combine as in the engines):
     newb = combine(c[i], agg, oldb);  newb = fixed ? x0 : newb
     x[i] <- newb
 
-VMEM per step: 2 adjacency tiles (bs, bs) + 7 state blocks (bs, d) — the 2
-double-buffered gathers, the old-block buffer, the accumulator, and the
-const/x0/fixed input blocks. With bs = d = 128 that is 2*64 KiB tiles +
-7*64 KiB state = 576 KiB, independent of k_max (the old layout streamed
-k_max tiles per step, so the hub row set every step's footprint).
+VMEM per step: 2 adjacency tiles (bs, bs) + 7 state blocks (bs, d) + the
+(1, d) delta row and (1, 1) active counter — independent of both k_max and
+``sweeps``. SMEM holds the nb dirty flags and the done bit.
 
 Supported (semiring, combine) pairs and their accumulator identities:
 
@@ -44,6 +65,10 @@ Supported (semiring, combine) pairs and their accumulator identities:
     max_times  / max_old   acc -BIG  (reachability: max(old, c, max w*x);
                                       requires nonnegative states — absent
                                       in-tile edges contribute w=0 products)
+
+``gs_sweep_pallas`` (the legacy single-sweep entry point) is the same kernel
+with ``sweeps=1``, an all-dirty frontier, and the delta/frontier outputs
+discarded — one body, one set of semantics.
 """
 from __future__ import annotations
 
@@ -54,7 +79,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.semirings import ACC_IDENTITY
+from repro.kernels.semirings import ACC_IDENTITY, DELTA_METRIC, delta_cols
 
 # semiring/combine pairs the kernel body implements, with the accumulator
 # identity (kernels.semirings.ACC_IDENTITY) each reduction starts from.
@@ -86,75 +111,265 @@ def _reduce_tile(semiring: str, acc_ref, tile, xs):
         raise ValueError(semiring)
 
 
-def _make_kernel(semiring: str, combine: str, bs: int):
-    def kernel(rowptr_ref, tilecols_ref, tiles_hbm, c_ref, x0_ref, fixed_ref,
-               x_hbm, x_out, xblk, tblk, oldblk, acc, sem_x, sem_t, sem_o):
-        i = pl.program_id(0)
-        lo = rowptr_ref[i]
-        hi = rowptr_ref[i + 1]
+def _make_kernel(semiring: str, combine: str, res_kind: str, bs: int,
+                 nb: int, sweeps: int, eps: float):
+    def kernel(rowptr_ref, tilecols_ref, revptr_ref, revrows_ref,
+               dirty_init_ref, tiles_hbm, c_ref, x0_ref, fixed_ref, x_hbm,
+               x_out, deltas_out, active_out, dirty_out,
+               xblk, tblk, oldblk, acc, dacc, cnt, dirty_s, done_s,
+               sem_x, sem_t, sem_o):
+        s = pl.program_id(0)
+        i = pl.program_id(1)
 
-        acc[...] = jnp.full_like(acc, ACC_IDENTITY[semiring])
+        # batch start: load the caller's frontier, clear the done bit
+        @pl.when(jnp.logical_and(s == 0, i == 0))
+        def _seed_frontier():
+            done_s[0] = 0
 
-        def gather(t, slot):
-            # source block for tile t, read from the *aliased output* so
-            # earlier grid steps' writes (this sweep) are visible
-            c = tilecols_ref[t]
-            return pltpu.make_async_copy(
-                x_out.at[pl.ds(c * bs, bs)], xblk.at[slot], sem_x.at[slot]
+            def cp(j, _):
+                dirty_s[j] = dirty_init_ref[j]
+                return 0
+
+            jax.lax.fori_loop(0, nb, cp, 0)
+
+        # sweep start: zero this sweep's delta row and active counter, so
+        # early-outed sweeps report 0 movement / 0 blocks touched
+        @pl.when(i == 0)
+        def _sweep_reset():
+            dacc[...] = jnp.zeros_like(dacc)
+            cnt[...] = jnp.zeros_like(cnt)
+
+        work = jnp.logical_and(done_s[0] == 0, dirty_s[i] != 0)
+
+        @pl.when(work)
+        def _update():
+            dirty_s[i] = 0
+            lo = rowptr_ref[i]
+            hi = rowptr_ref[i + 1]
+
+            acc[...] = jnp.full_like(acc, ACC_IDENTITY[semiring])
+
+            def gather(t, slot):
+                # source block for tile t, read from the *aliased output* so
+                # earlier grid steps' writes (this sweep) are visible
+                c = tilecols_ref[t]
+                return pltpu.make_async_copy(
+                    x_out.at[pl.ds(c * bs, bs)], xblk.at[slot], sem_x.at[slot]
+                )
+
+            def fetch_tile(t, slot):
+                return pltpu.make_async_copy(
+                    tiles_hbm.at[t], tblk.at[slot], sem_t.at[slot]
+                )
+
+            # the destination block's previous value: fetched once, its DMA
+            # overlaps the whole tile reduction below
+            old_cp = pltpu.make_async_copy(
+                x_out.at[pl.ds(i * bs, bs)], oldblk, sem_o
             )
+            old_cp.start()
 
-        def fetch_tile(t, slot):
-            return pltpu.make_async_copy(
-                tiles_hbm.at[t], tblk.at[slot], sem_t.at[slot]
-            )
+            # double-buffer warm-up: tile lo's DMAs go into slot 0
+            @pl.when(lo < hi)
+            def _warmup():
+                gather(lo, 0).start()
+                fetch_tile(lo, 0).start()
 
-        # the destination block's previous-round value: fetched once, its DMA
-        # overlaps the whole tile reduction below
-        old_cp = pltpu.make_async_copy(
-            x_out.at[pl.ds(i * bs, bs)], oldblk, sem_o
-        )
-        old_cp.start()
+            def body(t, _):
+                slot = jax.lax.rem(t - lo, 2)
+                nxt = 1 - slot
 
-        # double-buffer warm-up: tile lo's DMAs go into slot 0
-        @pl.when(lo < hi)
-        def _warmup():
-            gather(lo, 0).start()
-            fetch_tile(lo, 0).start()
+                # start tile t+1's fetches before blocking on tile t's
+                @pl.when(t + 1 < hi)
+                def _prefetch():
+                    gather(t + 1, nxt).start()
+                    fetch_tile(t + 1, nxt).start()
 
-        def body(t, _):
-            slot = jax.lax.rem(t - lo, 2)
-            nxt = 1 - slot
+                gather(t, slot).wait()
+                fetch_tile(t, slot).wait()
+                _reduce_tile(semiring, acc, tblk[slot], xblk[slot])
+                return 0
 
-            # start tile t+1's fetches before blocking on tile t's
-            @pl.when(t + 1 < hi)
-            def _prefetch():
-                gather(t + 1, nxt).start()
-                fetch_tile(t + 1, nxt).start()
+            jax.lax.fori_loop(lo, hi, body, 0)
 
-            gather(t, slot).wait()
-            fetch_tile(t, slot).wait()
-            _reduce_tile(semiring, acc, tblk[slot], xblk[slot])
-            return 0
+            old_cp.wait()
+            old = oldblk[...]
+            if combine == "replace":
+                new = c_ref[...] + acc[...]
+            elif combine == "min_old":
+                new = jnp.minimum(old, jnp.minimum(c_ref[...], acc[...]))
+            elif combine == "max_old":
+                new = jnp.maximum(old, jnp.maximum(c_ref[...], acc[...]))
+            else:
+                raise ValueError(combine)
+            new = jnp.where(fixed_ref[...] != 0, x0_ref[...], new)
 
-        jax.lax.fori_loop(lo, hi, body, 0)
+            # per-column delta in the engines' residual metric — the shared
+            # definition, so in-kernel and host convergence always agree
+            dblk = delta_cols(res_kind, new, old, xp=jnp,
+                              keepdims=True).astype(dacc.dtype)
+            if res_kind == "linf":
+                dacc[...] = jnp.maximum(dacc[...], dblk)
+            else:
+                dacc[...] += dblk
+            cnt[...] += 1.0
+            changed = jnp.any(new != old)
 
-        old_cp.wait()
-        old = oldblk[...]
-        if combine == "replace":
-            new = c_ref[...] + acc[...]
-        elif combine == "min_old":
-            new = jnp.minimum(old, jnp.minimum(c_ref[...], acc[...]))
-        elif combine == "max_old":
-            new = jnp.maximum(old, jnp.maximum(c_ref[...], acc[...]))
-        else:
-            raise ValueError(combine)
-        new = jnp.where(fixed_ref[...] != 0, x0_ref[...], new)
-        acc[...] = new.astype(acc.dtype)
-        cp = pltpu.make_async_copy(acc, x_out.at[pl.ds(i * bs, bs)], sem_o)
-        cp.start()
-        cp.wait()
+            acc[...] = new.astype(acc.dtype)
+            cp = pltpu.make_async_copy(acc, x_out.at[pl.ds(i * bs, bs)], sem_o)
+            cp.start()
+            cp.wait()
+
+            # this block moved (bitwise): every dependent's cached "my inputs
+            # held still" claim is void — re-mark them via the reverse CSR.
+            # A diagonal tile re-marks i itself, which is exactly right: its
+            # own state is one of its inputs then.
+            @pl.when(changed)
+            def _mark_dependents():
+                def mk(t, _):
+                    dirty_s[revrows_ref[t]] = 1
+                    return 0
+
+                jax.lax.fori_loop(revptr_ref[i], revptr_ref[i + 1], mk, 0)
+
+        deltas_out[...] = dacc[...]
+        active_out[...] = cnt[...]
+
+        # sweep end: all columns at or below eps -> predicate the remaining
+        # sweeps of this batch away (sticky; zeroed deltas keep it set)
+        @pl.when(i == nb - 1)
+        def _sweep_end():
+            done_now = jnp.where(jnp.all(dacc[...] <= eps), 1, 0)
+            done_s[0] = jnp.maximum(done_s[0], done_now.astype(done_s.dtype))
+
+        # batch end: export the frontier so the next batch resumes it
+        @pl.when(jnp.logical_and(s == sweeps - 1, i == nb - 1))
+        def _export_frontier():
+            def wr(j, _):
+                dirty_out[j] = dirty_s[j]
+                return 0
+
+            jax.lax.fori_loop(0, nb, wr, 0)
 
     return kernel
+
+
+def _check_pair(semiring: str, combine: str):
+    # each pair needs its own accumulator identity and reduction; an unknown
+    # pair would start from the wrong identity and silently compute garbage.
+    # Mirror pack_algorithm's guard (kernels/ops.py) here so direct kernel
+    # callers fail loudly too.
+    if (semiring, combine) not in _SUPPORTED:
+        raise NotImplementedError(
+            f"gs_sweep: unsupported semiring/combine pair "
+            f"({semiring!r}, {combine!r}); supported: {sorted(_SUPPORTED)}"
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("semiring", "combine", "res_kind", "bs", "sweeps",
+                     "eps", "interpret"),
+)
+def gs_multisweep_pallas(
+    rowptr: jnp.ndarray,    # int32[nb + 1]      scalar-prefetched
+    tilecols: jnp.ndarray,  # int32[nnz_blocks]  scalar-prefetched
+    revptr: jnp.ndarray,    # int32[nb + 1]      reverse-dep CSR, prefetched
+    revrows: jnp.ndarray,   # int32[nnz_blocks]  dependents of each src block
+    dirty: jnp.ndarray,     # int32[nb]          frontier bitmap (1 = dirty)
+    tiles: jnp.ndarray,     # f32[nnz_blocks, bs, bs]  ragged flat tiles
+    c: jnp.ndarray,         # f32[nb*bs, d]   per-vertex const
+    x0: jnp.ndarray,        # f32[nb*bs, d]
+    fixed: jnp.ndarray,     # f32[nb*bs, d]   1.0 where pinned
+    x: jnp.ndarray,         # f32[nb*bs, d]   state (aliased to output)
+    *,
+    semiring: str = "plus_times",
+    combine: str = "replace",
+    res_kind: str | None = None,
+    bs: int,
+    sweeps: int = 1,
+    eps: float = -1.0,
+    interpret: bool = True,
+):
+    """Run up to ``sweeps`` Gauss–Seidel sweeps in one persistent kernel.
+
+    Returns ``(x, deltas, active, dirty_out)``:
+
+    * ``x``        f32[n, d]  — state after the batch (input aliased)
+    * ``deltas``   f32[sweeps, d] — per-sweep per-column convergence metric
+      (``res_kind``; defaults to ``DELTA_METRIC[semiring]``). Early-outed
+      sweeps report 0, so the host reconstructs exact per-column round
+      counts from this trace.
+    * ``active``   f32[sweeps, 1] — blocks actually updated per sweep (the
+      ``active_block_fraction`` numerator; early-outed/skipped sweeps: 0)
+    * ``dirty_out`` int32[nb] — the frontier after the batch; feed it back
+      as ``dirty`` to resume, or all-ones to force a full sweep.
+
+    ``eps`` is the in-kernel early-out threshold (static): once a sweep's
+    deltas are all <= eps, the batch's remaining sweeps are predicated
+    no-ops. ``eps=-1.0`` disables the early-out (metrics are >= 0).
+    """
+    _check_pair(semiring, combine)
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if res_kind is None:
+        res_kind = DELTA_METRIC[semiring]
+    nb = rowptr.shape[0] - 1
+    n, d = x.shape
+    assert n == nb * bs
+    assert tiles.ndim == 3 and tiles.shape[1:] == (bs, bs)
+    assert tilecols.shape[0] == tiles.shape[0]
+    assert revptr.shape == rowptr.shape and dirty.shape == (nb,)
+    # the batched engine (run_async_block(backend="pallas")) feeds real
+    # multi-query columns here; all per-vertex operands must carry them
+    assert c.shape == x0.shape == fixed.shape == (n, d), (
+        c.shape, x0.shape, fixed.shape, (n, d)
+    )
+    kernel = _make_kernel(semiring, combine, res_kind, bs, nb, sweeps,
+                          float(eps))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(sweeps, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # ragged tiles, DMA'd manually
+            pl.BlockSpec((bs, d), lambda s, i, *_: (i, 0)),
+            pl.BlockSpec((bs, d), lambda s, i, *_: (i, 0)),
+            pl.BlockSpec((bs, d), lambda s, i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=(
+            pl.BlockSpec(memory_space=pl.ANY),              # x (aliased)
+            pl.BlockSpec((1, d), lambda s, i, *_: (s, 0)),  # deltas
+            pl.BlockSpec((1, 1), lambda s, i, *_: (s, 0)),  # active counts
+            pl.BlockSpec(memory_space=pltpu.VMEM),          # dirty_out
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2, bs, d), x.dtype),   # xblk: double-buffered gathers
+            pltpu.VMEM((2, bs, bs), x.dtype),  # tblk: double-buffered tiles
+            pltpu.VMEM((bs, d), x.dtype),      # oldblk
+            pltpu.VMEM((bs, d), x.dtype),      # acc
+            pltpu.VMEM((1, d), jnp.float32),   # dacc: sweep delta per column
+            pltpu.VMEM((1, 1), jnp.float32),   # cnt: active blocks this sweep
+            pltpu.SMEM((nb,), jnp.int32),      # dirty flags (the frontier)
+            pltpu.SMEM((1,), jnp.int32),       # done bit (early-out)
+            pltpu.SemaphoreType.DMA((2,)),     # sem_x
+            pltpu.SemaphoreType.DMA((2,)),     # sem_t
+            pltpu.SemaphoreType.DMA,           # sem_o (old fetch + writeback)
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((sweeps, d), jnp.float32),
+            jax.ShapeDtypeStruct((sweeps, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ),
+        # x (after the 5 prefetch args) -> output 0
+        input_output_aliases={9: 0},
+        interpret=interpret,
+    )(rowptr, tilecols, revptr, revrows, dirty, tiles, c, x0, fixed, x)
 
 
 @functools.partial(
@@ -175,51 +390,20 @@ def gs_sweep_pallas(
     bs: int,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    # each pair needs its own accumulator identity and reduction; an unknown
-    # pair would start from the wrong identity and silently compute garbage.
-    # Mirror pack_algorithm's guard (kernels/ops.py) here so direct kernel
-    # callers fail loudly too.
-    if (semiring, combine) not in _SUPPORTED:
-        raise NotImplementedError(
-            f"gs_sweep_pallas: unsupported semiring/combine pair "
-            f"({semiring!r}, {combine!r}); supported: {sorted(_SUPPORTED)}"
-        )
+    """One full sweep, state in / state out — the legacy per-sweep entry
+    point, now the ``sweeps=1`` megakernel with an all-dirty frontier and the
+    delta/frontier outputs discarded (an empty reverse-dep CSR makes the
+    dirty bookkeeping a no-op). Bitwise-identical to the dedicated
+    single-sweep kernel it replaces: every block updates, in the same order,
+    with the same tile walk."""
+    _check_pair(semiring, combine)
     nb = rowptr.shape[0] - 1
-    n, d = x.shape
-    assert n == nb * bs
-    assert tiles.ndim == 3 and tiles.shape[1:] == (bs, bs)
-    assert tilecols.shape[0] == tiles.shape[0]
-    # the batched engine (run_async_block(backend="pallas")) feeds real
-    # multi-query columns here; all per-vertex operands must carry them
-    assert c.shape == x0.shape == fixed.shape == (n, d), (
-        c.shape, x0.shape, fixed.shape, (n, d)
-    )
-    kernel = _make_kernel(semiring, combine, bs)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # ragged tiles, DMA'd manually
-            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
-            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
-            pl.BlockSpec((bs, d), lambda i, rowptr_ref, tilecols_ref: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=[
-            pltpu.VMEM((2, bs, d), x.dtype),   # xblk: double-buffered gathers
-            pltpu.VMEM((2, bs, bs), x.dtype),  # tblk: double-buffered tiles
-            pltpu.VMEM((bs, d), x.dtype),      # oldblk
-            pltpu.VMEM((bs, d), x.dtype),      # acc
-            pltpu.SemaphoreType.DMA((2,)),     # sem_x
-            pltpu.SemaphoreType.DMA((2,)),     # sem_t
-            pltpu.SemaphoreType.DMA,           # sem_o (old fetch + writeback)
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
-        input_output_aliases={6: 0},  # x (after the 2 prefetch args) -> output
+    x_new, _, _, _ = gs_multisweep_pallas(
+        rowptr, tilecols,
+        jnp.zeros((nb + 1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+        jnp.ones((nb,), jnp.int32),
+        tiles, c, x0, fixed, x,
+        semiring=semiring, combine=combine, bs=bs, sweeps=1, eps=-1.0,
         interpret=interpret,
-    )(rowptr, tilecols, tiles, c, x0, fixed, x)
+    )
+    return x_new

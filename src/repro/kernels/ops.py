@@ -102,10 +102,13 @@ def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
 
     ident = algo.semiring.identity
     x0pad = padm(algo.x0, ident)
+    revptr, revrows = bsr.reverse_deps()
     return {
         "rowptr": jnp.asarray(bsr.rowptr),
         "tilecols": jnp.asarray(bsr.tilecols),
         "tilerows": jnp.asarray(bsr.tilerows),
+        "revptr": jnp.asarray(revptr),
+        "revrows": jnp.asarray(revrows),
         "tiles": jnp.asarray(bsr.tiles),
         "c": jnp.asarray(padm(algo.c, algo.c_pad_fill)),
         "x0": jnp.asarray(x0pad),
@@ -120,16 +123,21 @@ def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
 
 def run_async_block_pallas(
     algo: AlgoInstance, bs: int = 128, max_iters: int = 500, interpret=None,
-    x_init: np.ndarray | None = None,
+    x_init: np.ndarray | None = None, sweeps_per_call: int = 1,
+    frontier: np.ndarray | None = None,
 ) -> RunResult:
     """Async engine with the fused gs_sweep kernel doing each sweep.
 
     Back-compat shim: the convergence loop now lives in the engine layer —
     this is ``run_async_block(algo, backend="pallas")`` with an explicit
-    interpret override.
+    interpret override. ``sweeps_per_call > 1`` batches that many sweeps
+    into one persistent megakernel launch (in-kernel convergence +
+    active-frontier block skipping); ``frontier`` optionally seeds the dirty
+    bitmap from a vertex-level bool[n] mask (see `engine.async_block`).
     """
     from repro.engine.async_block import _run_async_block_pallas
 
     return _run_async_block_pallas(
-        algo, bs, max_iters, 1, x_init, interpret=interpret
+        algo, bs, max_iters, 1, x_init, interpret=interpret,
+        sweeps_per_call=sweeps_per_call, frontier=frontier,
     )

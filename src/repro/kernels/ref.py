@@ -1,18 +1,25 @@
 """Pure-numpy oracles for the Pallas kernels (the allclose ground truth).
 
-Both oracles walk the same ragged flat-BSR layout as the kernels
+The oracles walk the same ragged flat-BSR layout as the kernels
 (`graphs.blocked.FlatBSRMatrix`) with plain Python loops over row-blocks —
 deliberately the dumbest possible implementation, so tests compare the
 kernels against code whose correctness is visible at a glance. Reductions
 run in the kernels' tile order, which makes min/max semirings bitwise
 comparable (order-free reductions) and plus_times comparable to float
 accumulation-order noise.
+
+`ref_gs_multisweep` models the megakernel's sweep-batched frontier
+semantics exactly: per-sweep delta accumulation in the engines' residual
+metric, the all-columns-below-eps early-out, the dirty bitmap gating each
+block update, and reverse-dependency re-marking *during* the sweep (a block
+changed by an earlier block this sweep is visible to later blocks
+immediately, next sweep otherwise).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels.semirings import ACC_IDENTITY
+from repro.kernels.semirings import ACC_IDENTITY, DELTA_METRIC, delta_cols
 
 
 def _tile_op(semiring: str, tile: np.ndarray, xs: np.ndarray) -> np.ndarray:
@@ -99,3 +106,66 @@ def ref_gs_sweep(
         sl = slice(i * bs, (i + 1) * bs)
         xcur[sl] = _combine(combine, acc, c[sl], xcur[sl], fixed[sl], x0[sl])
     return xcur
+
+
+def ref_gs_multisweep(
+    rowptr, tilecols, revptr, revrows, dirty, tiles, c, x0, fixed, x,
+    semiring: str = "plus_times", combine: str = "replace",
+    res_kind: str | None = None, eps: float = -1.0, sweeps: int = 1,
+):
+    """Numpy mirror of `gs_sweep.gs_multisweep_pallas`: up to ``sweeps``
+    frontier-gated Gauss–Seidel sweeps with in-oracle convergence.
+
+    Returns ``(x, deltas[sweeps, d], active[sweeps], dirty_out[nb])`` with
+    the megakernel's exact semantics: a clean block is skipped (its state
+    untouched), a changed block re-marks its reverse-dependency rows
+    mid-sweep, a sweep whose deltas all drop to ``eps`` early-outs the rest
+    of the batch (their delta/active rows report 0)."""
+    if res_kind is None:
+        res_kind = DELTA_METRIC[semiring]
+    rowptr = np.asarray(rowptr)
+    tilecols = np.asarray(tilecols)
+    revptr = np.asarray(revptr)
+    revrows = np.asarray(revrows)
+    tiles = np.asarray(tiles, np.float32)
+    c = np.asarray(c, np.float32)
+    x0 = np.asarray(x0, np.float32)
+    fixed = np.asarray(fixed)
+    xcur = np.array(x, np.float32, copy=True)
+    nb = len(rowptr) - 1
+    bs = tiles.shape[-1]
+    d = xcur.shape[1]
+    dirty_s = np.asarray(dirty, np.int32).copy()
+    deltas = np.zeros((sweeps, d), np.float32)
+    active = np.zeros((sweeps,), np.float32)
+    done = False
+    for s in range(sweeps):
+        if done:
+            continue
+        dacc = np.zeros((d,), np.float32)
+        for i in range(nb):
+            if not dirty_s[i]:
+                continue
+            dirty_s[i] = 0
+            acc = np.full((bs, d), ACC_IDENTITY[semiring], np.float32)
+            for t in range(rowptr[i], rowptr[i + 1]):
+                cblk = tilecols[t]
+                xs = xcur[cblk * bs:(cblk + 1) * bs]
+                acc = _reduce(semiring, acc, _tile_op(semiring, tiles[t], xs))
+            sl = slice(i * bs, (i + 1) * bs)
+            old = xcur[sl].copy()
+            new = _combine(combine, acc, c[sl], old, fixed[sl], x0[sl])
+            dblk = delta_cols(res_kind, new, old, xp=np)
+            if res_kind == "linf":
+                dacc = np.maximum(dacc, dblk)
+            else:
+                dacc = dacc + dblk
+            active[s] += 1.0
+            xcur[sl] = new
+            if np.any(new != old):
+                for t in range(revptr[i], revptr[i + 1]):
+                    dirty_s[revrows[t]] = 1
+        deltas[s] = dacc
+        if np.all(dacc <= eps):
+            done = True
+    return xcur, deltas, active, dirty_s

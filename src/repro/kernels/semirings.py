@@ -11,6 +11,17 @@ TILE_FILL[s]     — the value absent edges *inside* a nonzero tile carry; the
                    semiring's absorbing element under its edge op, except
                    max_times, whose multiplicative fill 0 is only harmless
                    for nonnegative states (documented at the constructors).
+DELTA_METRIC[s]  — the in-kernel per-sweep convergence metric the multisweep
+                   megakernel accumulates for this semiring when the caller
+                   does not pin one: the lattice (min/max) semirings move in
+                   discrete steps, so "changed" (count of entries that moved,
+                   an absolute did-anything-change signal) is exact; the
+                   plus semiring contracts continuously, so the metric is the
+                   max-|residual| ("linf") the sum-algorithm engines
+                   threshold against eps. These match the `residual` kinds
+                   `engine.algorithms` assigns, so in-kernel convergence
+                   decisions agree with the host drivers' sweep-at-a-time
+                   decisions (asserted in tests).
 """
 from __future__ import annotations
 
@@ -29,3 +40,30 @@ TILE_FILL: dict[str, float] = {
     "max_min": float(-BIG),
     "max_times": 0.0,
 }
+
+DELTA_METRIC: dict[str, str] = {
+    "plus_times": "linf",
+    "min_plus": "changed",
+    "max_min": "changed",
+    "max_times": "changed",
+}
+
+
+def delta_cols(res_kind: str, new, old, xp, keepdims: bool = False):
+    """Per-column convergence metric over the row axis — THE definition.
+
+    One function serves every consumer so the metrics can never drift apart:
+    the engines' host drivers (`engine.jax_ops.residual_cols`, xp=jnp over
+    full (n, d) states), the multisweep megakernel (xp=jnp over one (bs, d)
+    block, keepdims=True for the (1, d) VMEM accumulator), and the numpy
+    oracle (`kernels.ref`, xp=np). ``xp`` is the array namespace (numpy or
+    jax.numpy — identical APIs for everything used here).
+    """
+    if res_kind == "linf":
+        return xp.max(xp.abs(new - old), axis=0, keepdims=keepdims)
+    if res_kind == "l1":
+        return xp.sum(xp.abs(new - old), axis=0, keepdims=keepdims)
+    if res_kind == "changed":
+        return xp.sum((new != old).astype(xp.float32), axis=0,
+                      keepdims=keepdims)
+    raise ValueError(res_kind)

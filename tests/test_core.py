@@ -73,6 +73,74 @@ def test_gograph_beats_baselines_on_clustered_graph():
         assert sorted(r.tolist()) == list(range(g.n)), name
 
 
+@given(st.integers(1, 40), st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_scan_best_gap_matches_sequential_reference(k, seed):
+    """The vectorized GetOptVal gap scan must reproduce the paper's
+    sequential loop bitwise: same running f64 pe, same strict-improvement
+    ("paper line 18") tie-breaking, same best gap index."""
+    from repro.core.gograph import _scan_best_gap
+
+    rng = np.random.RandomState(seed)
+    # signed per-neighbor deltas incl. exact ties and zeros, plus a head pe
+    delta_per = rng.choice([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0], size=k)
+    pe0 = float(rng.choice([0.0, 0.5, 1.0, 3.0]))
+
+    pe = pe0
+    best_pe = pe
+    best_idx = -1
+    for i in range(k):
+        pe += delta_per[i]
+        if pe > best_pe:  # strict improvement
+            best_pe = pe
+            best_idx = i
+
+    assert _scan_best_gap(pe0, delta_per) == best_idx
+
+
+def test_inserter_bitwise_identical_to_sequential_scan():
+    """End-to-end pin for the vectorized GetOptVal scan: replaying identical
+    insertion sequences through the current `_Inserter` and through a
+    reference inserter whose scan is the original sequential loop must
+    produce bitwise-identical val arrays (hence identical orders)."""
+    import repro.core.gograph as gg
+
+    class _ReferenceInserter(gg._Inserter):
+        pass
+
+    def _sequential_scan(pe_head, delta_per):
+        pe = pe_head
+        best_pe, best_idx = pe, -1
+        for i in range(len(delta_per)):
+            pe += delta_per[i]
+            if pe > best_pe:  # strict improvement (paper line 18)
+                best_pe, best_idx = pe, i
+        return best_idx
+
+    g = gen.scrambled(gen.powerlaw_cluster(400, 4, seed=7), seed=2)
+    gw = gen.with_random_weights(g, seed=3)
+    csc_indptr, csc_src, csc_eid = gw.csc()
+    csr_indptr, csr_dst, csr_eid = gw.csr()
+
+    ins = gg._Inserter(g.n)
+    ref = _ReferenceInserter(g.n)
+    orig = gg._scan_best_gap
+    rng = np.random.RandomState(0)
+    for v in rng.permutation(g.n):
+        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]].astype(np.int64)
+        win = gw.weights[csc_eid[csc_indptr[v]:csc_indptr[v + 1]]]
+        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]].astype(np.int64)
+        wout = gw.weights[csr_eid[csr_indptr[v]:csr_indptr[v + 1]]]
+        v1 = ins.insert(int(v), inn, win, outn, wout)
+        gg._scan_best_gap = _sequential_scan
+        try:
+            v2 = ref.insert(int(v), inn, win, outn, wout)
+        finally:
+            gg._scan_best_gap = orig
+        assert v1 == v2, v
+    np.testing.assert_array_equal(ins.val, ref.val)
+
+
 def test_gograph_deterministic():
     g = gen.powerlaw_cluster(500, 3, seed=2)
     r1 = gograph_order(g)

@@ -236,6 +236,198 @@ def test_incremental_warm_start_through_pallas_backend():
         np.testing.assert_allclose(r_pal.x, r_cold.x, atol=1e-3, rtol=1e-3)
 
 
+# ---------------------------------------------------------------------------
+# the persistent multi-sweep megakernel: sweep batching, in-kernel
+# convergence, and active-frontier block skipping
+# ---------------------------------------------------------------------------
+
+def _msweep_args(ops):
+    return (ops["rowptr"], ops["tilecols"], ops["revptr"], ops["revrows"])
+
+
+@pytest.mark.parametrize("algo_name,_w", PAIRS)
+def test_multisweep_matches_ref_oracle(algo_name, _w):
+    """Megakernel vs the numpy sweep-batched frontier oracle: state, the
+    per-sweep delta trace, active-block counts, and the exported frontier
+    must all agree (bitwise for the lattice semirings)."""
+    from repro.kernels.gs_sweep import gs_multisweep_pallas
+    from repro.kernels.ref import ref_gs_multisweep
+
+    algo = _contract_algo(algo_name, 1)
+    ops = pack_algorithm(algo, bs=32)
+    nb = int(ops["rowptr"].shape[0]) - 1
+    dirty = jnp.ones((nb,), jnp.int32)
+    kw = dict(semiring=ops["semiring"], combine=ops["combine"],
+              res_kind=algo.residual, eps=float(algo.eps))
+    xk, dk, ak, fk = gs_multisweep_pallas(
+        *_msweep_args(ops), dirty, ops["tiles"], ops["c"], ops["x0"],
+        ops["fixed"], ops["x"], bs=32, sweeps=6, **kw)
+    xr, dr, ar, fr = ref_gs_multisweep(
+        *_msweep_args(ops), dirty, ops["tiles"], ops["c"], ops["x0"],
+        ops["fixed"], ops["x"], sweeps=6, **kw)
+    if algo.semiring.reduce == "sum":
+        np.testing.assert_allclose(np.asarray(xk), xr, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(dk), dr, atol=1e-4, rtol=1e-3)
+    else:
+        np.testing.assert_array_equal(np.asarray(xk), xr)
+        np.testing.assert_array_equal(np.asarray(dk), dr)
+    np.testing.assert_array_equal(np.asarray(ak)[:, 0], ar)
+    np.testing.assert_array_equal(np.asarray(fk), fr)
+
+
+@pytest.mark.parametrize("algo_name,_w", PAIRS)
+@pytest.mark.parametrize("d", [1, 3])
+def test_multisweep_engine_matches_per_sweep(algo_name, _w, d):
+    """sweeps_per_call=4 must reproduce the per-sweep pallas engine on
+    non-divisible n for every fused pair: same per-column round counts, and
+    bitwise-equal states for the lattice semirings (skipped blocks are
+    bitwise no-ops, so frontier execution IS full-sweep execution)."""
+    algo = _contract_algo(algo_name, d)
+    r1 = run_async_block_pallas(algo, bs=64, max_iters=300)
+    rb = run_async_block_pallas(algo, bs=64, max_iters=300, sweeps_per_call=4)
+    assert rb.rounds == r1.rounds
+    np.testing.assert_array_equal(rb.col_rounds, r1.col_rounds)
+    if algo.semiring.reduce == "sum":
+        # batched sweeps keep advancing a converged column until the batch
+        # stops (no per-column freezing), each step moving it < eps
+        np.testing.assert_allclose(rb.x, r1.x, atol=1e-4, rtol=1e-4)
+    else:
+        np.testing.assert_array_equal(rb.x, r1.x)
+    assert rb.active_block_fraction is not None
+    assert len(rb.active_block_fraction) == rb.rounds
+
+
+@pytest.mark.parametrize("algo_name,_w", PAIRS)
+def test_multisweep_warm_start(algo_name, _w):
+    """x_init through the sweep-batched path: resume from a 3-round state
+    and land where the per-sweep engine lands; resume from a *converged*
+    state and early-out in a single batch (1 verification sweep, bitwise
+    no-op for the lattice semirings)."""
+    algo = _contract_algo(algo_name, 1)
+    r_mid = run_async_block(algo, bs=64, max_iters=3)
+    r1 = run_async_block_pallas(algo, bs=64, x_init=r_mid.x, max_iters=300)
+    rb = run_async_block_pallas(algo, bs=64, x_init=r_mid.x, max_iters=300,
+                                sweeps_per_call=16)
+    assert rb.rounds == r1.rounds
+    if algo.semiring.reduce == "sum":
+        np.testing.assert_allclose(rb.x, r1.x, atol=1e-4, rtol=1e-4)
+    else:
+        np.testing.assert_array_equal(rb.x, r1.x)
+    r_cold = run_async_block(algo, bs=64)
+    r_res = run_async_block_pallas(algo, bs=64, x_init=r_cold.x,
+                                   max_iters=300, sweeps_per_call=16)
+    assert r_res.rounds == 1
+    if algo.semiring.reduce != "sum":
+        np.testing.assert_array_equal(r_res.x, r_cold.x)
+
+
+def test_multisweep_frontier_skip_bitwise_at_fixpoint():
+    """The frontier contract, directly: re-running a converged state with
+    an all-dirty frontier (every block updates once — full verification
+    sweep) and with a partially-seeded frontier (most blocks skipped) must
+    both leave the state bitwise unchanged — a skipped block equals an
+    updated one at fixpoint."""
+    algo = _contract_algo("sssp", 1)
+    r_cold = run_async_block(algo, bs=64)
+    # all-dirty: every block verifies
+    r_full = run_async_block_pallas(algo, bs=64, x_init=r_cold.x,
+                                    sweeps_per_call=4)
+    np.testing.assert_array_equal(r_full.x, r_cold.x)
+    assert r_full.active_block_fraction[0] == 1.0
+    # partial frontier: only the first vertex's block updates, rest skipped
+    fr = np.zeros(algo.n, bool)
+    fr[0] = True
+    r_part = run_async_block_pallas(algo, bs=64, x_init=r_cold.x,
+                                    sweeps_per_call=4, frontier=fr)
+    np.testing.assert_array_equal(r_part.x, r_cold.x)
+    assert 0.0 < r_part.active_block_fraction[0] < 1.0
+
+
+def test_multisweep_empty_frontier_early_exit():
+    """An empty frontier on a converged state is the cheapest possible
+    serving no-op: zero blocks touched, convergence declared after one
+    batch (rounds == 1), state bitwise untouched."""
+    for name in ("pagerank", "sssp"):
+        algo = _contract_algo(name, 1)
+        r_cold = run_async_block(algo, bs=64)
+        r = run_async_block_pallas(algo, bs=64, x_init=r_cold.x,
+                                   sweeps_per_call=8,
+                                   frontier=np.zeros(algo.n, bool))
+        assert r.rounds == 1, name
+        assert r.converged
+        np.testing.assert_array_equal(
+            r.x, np.asarray(r_cold.x, np.float32))
+        assert r.active_block_fraction[0] == 0.0
+
+
+def test_multisweep_frontier_shrinks_during_convergence():
+    """The active_block_fraction trace must shrink as SSSP converges (the
+    frontier win the bench records): the last sweep touches strictly fewer
+    blocks than the first."""
+    algo = _contract_algo("sssp", 1)
+    r = run_async_block_pallas(algo, bs=16, sweeps_per_call=16)
+    af = r.active_block_fraction
+    assert af[0] == 1.0
+    assert af[-1] < af[0]
+
+
+def test_incremental_frontier_seeding_through_megakernel():
+    """run_incremental(backend='pallas', sweeps_per_call=4): warm-start
+    frontiers seeded from the delta-touched blocks must land on the cold
+    fixpoint (bitwise for sssp) while skipping untouched regions."""
+    from repro.engine import remake, run_incremental
+    from repro.graphs.delta import random_delta
+
+    g0 = gen.scrambled(gen.powerlaw_cluster(300, 3, seed=2), seed=3)
+    gw = gen.with_random_weights(g0, seed=1)
+    for name, g in (("pagerank", g0), ("sssp", gw)):
+        algo_old = get_algorithm(name, g)
+        delta = random_delta(g, frac_add=0.02, seed=5)
+        algo_new = remake(algo_old, delta.apply(g))
+        prior = run_async_block(algo_old, bs=64)
+        r_batch = run_incremental(algo_new, algo_old, prior, bs=64,
+                                  backend="pallas", sweeps_per_call=4,
+                                  max_iters=300)
+        r_cold = run_async_block(algo_new, bs=64)
+        if name == "sssp":
+            np.testing.assert_array_equal(r_batch.x, r_cold.x)
+            # the seeded frontier must actually skip work somewhere
+            assert min(r_batch.active_block_fraction) < 1.0
+        else:
+            np.testing.assert_allclose(r_batch.x, r_cold.x,
+                                       atol=1e-3, rtol=1e-3)
+
+
+def test_multisweep_knobs_rejected_where_invalid():
+    algo = _contract_algo("pagerank", 1)
+    with pytest.raises(ValueError):
+        run_async_block(algo, bs=64, sweeps_per_call=4)  # jax backend
+    with pytest.raises(ValueError):
+        run_async_block(algo, bs=64, backend="pallas", sweeps_per_call=0)
+    with pytest.raises(NotImplementedError):
+        run_async_block(algo, bs=64, backend="pallas", sweeps_per_call=4,
+                        extrapolate_every=4)
+    with pytest.raises(ValueError):
+        # frontier must be vertex-level bool[n]
+        run_async_block(algo, bs=64, backend="pallas", sweeps_per_call=4,
+                        frontier=np.zeros(3, bool))
+
+
+def test_delta_metric_matches_algorithm_residuals():
+    """kernels.semirings.DELTA_METRIC must agree with the residual kinds the
+    algorithm constructors assign, or in-kernel convergence decisions would
+    diverge from the host drivers'."""
+    from repro.kernels.ops import _KERNEL_SEMIRING
+    from repro.kernels.semirings import DELTA_METRIC
+
+    g = gen.with_random_weights(gen.powerlaw_cluster(50, 3, seed=0), seed=1)
+    for name in ("pagerank", "sssp", "sswp", "reachability"):
+        algo = get_algorithm(name, g)
+        semiring = _KERNEL_SEMIRING[(algo.semiring.reduce,
+                                     algo.semiring.edge_op)]
+        assert DELTA_METRIC[semiring] == algo.residual, name
+
+
 def test_gs_sweep_uses_fresh_states():
     """The defining property of the fused sweep: a block's update sees
     earlier blocks' THIS-sweep values (positive cross-block edges are fresh,
