@@ -26,6 +26,7 @@ MODULES = [
     "roofline_report",        # dry-run roofline aggregation
     "batched_queries",        # batched multi-query engine throughput
     "incremental",            # evolving graphs: warm vs cold serving
+    "serving_bench",          # continuous vs static batching (GraphServer)
 ]
 
 

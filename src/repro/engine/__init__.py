@@ -8,7 +8,7 @@ from repro.engine.algorithms import (
     personalized_pagerank,
     remake,
 )
-from repro.engine.async_block import run_async_block
+from repro.engine.async_block import AsyncBlockSession, run_async_block
 from repro.engine.distributed import run_distributed
 from repro.engine.incremental import permute_state, run_incremental, warm_state
 from repro.engine.priority import run_priority_block
@@ -25,6 +25,7 @@ __all__ = [
     "remake",
     "run_sync",
     "run_async_block",
+    "AsyncBlockSession",
     "run_distributed",
     "run_priority_block",
     "run_incremental",

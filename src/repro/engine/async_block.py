@@ -34,6 +34,7 @@ already self-consistent — see `engine.incremental`).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -230,3 +231,219 @@ def _run_async_block_pallas(
     res = harness.finalize(algo, *out[:6])
     res.active_block_fraction = out[6]
     return res
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Outcome of one bounded-round session batch (host-side, per column)."""
+
+    rounds: int                # rounds the batch actually executed
+    col_done: np.ndarray       # bool[d]  — converged within THIS batch
+    col_rounds: np.ndarray     # int32[d] — rounds each column was active
+
+
+class AsyncBlockSession:
+    """Pre-packed block-GS runner for repeated bounded-round batches over a
+    resident ``f32[npad, d]`` state — the engine side of continuous batching.
+
+    `run_async_block` packs, converges, unpacks — one query batch per call.
+    A serving event loop (`repro.serving`) instead keeps *one* state matrix
+    resident across many short batches, swapping finished query columns out
+    and queued queries in between batches. This session packs the family's
+    edge structure **once**; each :meth:`run_batch` drives up to
+    ``max_iters`` rounds through the shared round driver (per-column
+    convergence freezing included), and :meth:`swap_in` performs the
+    mid-run column re-init (`harness.swap_in_column`): newcomer ``x0 / c /
+    fixed`` written into the packed operand columns, resident state column
+    reset to the newcomer's start.
+
+    The session owns the *cumulative* per-column accounting
+    (``col_done`` / ``col_rounds``, folded from every batch's report):
+    :meth:`swap_in` inverts it for exactly the swapped column
+    (`convergence.reinit_columns`), so ``col_rounds[j]`` always reads the
+    rounds the slot's **current** query has consumed since its swap-in —
+    the number the serving layer bills to its ticket.
+
+    Backends mirror `run_async_block`: ``"jax"`` (gather/segment-reduce
+    sweep) and ``"pallas"`` (fused flat-BSR kernel). With
+    ``sweeps_per_call > 1`` the persistent megakernel runs and the
+    dirty-block frontier bitmap is carried across batches *and* swaps: a
+    swapped-in column ORs exactly its support blocks into the bitmap
+    (`kernels.gs_sweep.or_dirty_blocks`), so the kernel only re-touches
+    what the newcomer needs while blocks clean for every in-flight column
+    stay skipped.
+
+    A column's trajectory from swap-in to convergence is exactly what a
+    solo `run_async_block` of that query produces: sweeps act columnwise
+    independently and batch boundaries are invisible (`harness.loop` keeps
+    an active column's post-sweep state, a converging column's pre-sweep
+    state). Min/max-semiring columns match a solo run bitwise; sum columns
+    to eps under ``sweeps_per_call > 1`` (no mid-batch freezing — see
+    `harness.sweep_batched_loop`).
+    """
+
+    def __init__(
+        self, algo: AlgoInstance, bs: int = 256, inner: int = 1,
+        backend: str = "jax", sweeps_per_call: int = 1,
+        interpret: bool | None = None,
+    ):
+        if backend not in ("jax", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if sweeps_per_call < 1:
+            raise ValueError(f"sweeps_per_call must be >= 1, got {sweeps_per_call}")
+        if backend == "jax" and sweeps_per_call != 1:
+            raise ValueError("sweeps_per_call > 1 is a pallas-backend knob")
+        if backend == "pallas" and inner != 1:
+            raise ValueError("backend='pallas' runs the fused sweep; inner must be 1")
+        self.algo = algo
+        self.bs = bs
+        self.inner = inner
+        self.backend = backend
+        self.sweeps_per_call = sweeps_per_call
+        self.n = algo.n
+        self.d = algo.d
+        if backend == "jax":
+            be, x0, c, fixed, _ = harness.pack(algo, bs)
+            self.nb = be.nb
+            self._edges = tuple(
+                jnp.asarray(a) for a in (be.esrc, be.edst, be.ew, be.emask)
+            )
+            self.x0, self.c, self.fixed = x0, c, fixed
+        else:
+            from repro.kernels.ops import _auto_interpret, pack_algorithm
+
+            ops = pack_algorithm(algo, bs)
+            self._ops = ops
+            self._interpret = _auto_interpret(interpret)
+            self.nb = int(ops["rowptr"].shape[0]) - 1
+            self.x0 = np.asarray(ops["x0"]).copy()
+            self.c = np.asarray(ops["c"]).copy()
+            self.fixed = np.asarray(ops["fixed"]).copy()
+            # cold start: every block dirty (the only safe default; swaps
+            # and batches keep the bitmap faithful from here on)
+            self.dirty = np.ones(self.nb, np.int32)
+        self.x = self.x0.copy()
+        # cumulative per-column accounting across batches; swap_in inverts
+        # it for exactly the swapped column (convergence.reinit_columns)
+        self.col_done = np.zeros(self.d, bool)
+        self.col_rounds = np.zeros(self.d, np.int32)
+        # x0/c/fixed only change at swap_in; cache their device copies so
+        # swap-free batches don't re-pay the (npad, d) H2D transfers
+        self._dev_operands = None
+
+    def _operands(self):
+        """Device copies of (x0, c, fixed), refreshed only after a swap."""
+        if self._dev_operands is None:
+            self._dev_operands = tuple(
+                jnp.asarray(a) for a in (self.x0, self.c, self.fixed)
+            )
+        return self._dev_operands
+
+    @property
+    def state(self) -> np.ndarray:
+        """The resident (n, d) state, padding rows stripped."""
+        return self.x[: self.n]
+
+    def swap_in(self, j: int, q_x0, q_c, q_fixed) -> None:
+        """Install a new query into column ``j`` (between batches)."""
+        from repro.engine.convergence import reinit_columns
+
+        self.col_done, self.col_rounds = reinit_columns(
+            self.col_done, self.col_rounds, [j]
+        )
+        q_x0, q_c = np.asarray(q_x0), np.asarray(q_c)
+        q_fixed = np.asarray(q_fixed).astype(bool)
+        harness.swap_in_column(
+            self.x, self.x0, self.c, self.fixed, j, self.n, q_x0, q_c,
+            # kernel operands carry fixed as f32 (1.0 = pinned)
+            q_fixed.astype(np.float32) if self.backend == "pallas" else q_fixed,
+        )
+        self._dev_operands = None
+        if self.backend == "pallas" and self.sweeps_per_call > 1:
+            from repro.kernels.gs_sweep import or_dirty_blocks
+
+            support = harness.column_support(
+                q_x0, q_c, q_fixed,
+                reduce=self.algo.semiring.reduce,
+                c_fill=self.algo.c_pad_fill,
+            )
+            # seed the support vertices AND everything their out-edges feed:
+            # an injected seed (e.g. the SSSP source) can already satisfy its
+            # own update equation, in which case its block never *changes*
+            # and would never re-mark dependents — the newcomer's frontier
+            # must start at the first vertices whose equations the injection
+            # invalidates, exactly the out-neighbors of the support.
+            touched = support.copy()
+            touched[self.algo.dst[support[self.algo.src]]] = True
+            self.dirty = or_dirty_blocks(self.dirty, touched, self.n, self.bs)
+
+    def run_batch(self, max_iters: int) -> BatchReport:
+        """Advance every column up to ``max_iters`` rounds; converged
+        columns freeze (jax / single-sweep pallas) and the batch stops early
+        once all columns are done. Updates the resident state in place."""
+        a = self.algo
+        if max_iters % self.sweeps_per_call:
+            # the megakernel always executes sweeps_per_call sweeps per
+            # launch; a non-multiple budget would advance the state by
+            # uncounted sweeps and desynchronize per-column round accounting
+            raise ValueError(
+                f"max_iters={max_iters} must be a multiple of "
+                f"sweeps_per_call={self.sweeps_per_call}"
+            )
+        x0_d, c_d, fx_d = self._operands()
+        if self.backend == "jax":
+            out = _run(
+                *self._edges, jnp.asarray(self.x), x0_d, c_d, fx_d,
+                bs=self.bs, nb=self.nb, n_real=self.n,
+                sem_reduce=a.semiring.reduce, sem_edge=a.semiring.edge_op,
+                comb=a.combine, res_kind=a.residual, eps=a.eps,
+                max_iters=max_iters, identity=a.semiring.identity,
+                inner=self.inner, extrapolate_every=0,
+            )
+        elif self.sweeps_per_call == 1:
+            ops = self._ops
+            out = _run_pallas(
+                ops["rowptr"], ops["tilecols"], ops["tiles"],
+                c_d, x0_d, fx_d, jnp.asarray(self.x),
+                semiring=ops["semiring"], combine=ops["combine"], bs=self.bs,
+                n_real=self.n, res_kind=a.residual, eps=a.eps,
+                max_iters=max_iters, interpret=self._interpret,
+                extrapolate_every=0,
+            )
+        else:
+            from repro.kernels.gs_sweep import gs_multisweep_pallas
+
+            ops = self._ops
+            x0_dev, c_dev, fx_dev = x0_d, c_d, fx_d
+
+            def batch_fn(x, dirty):
+                return gs_multisweep_pallas(
+                    ops["rowptr"], ops["tilecols"], ops["revptr"],
+                    ops["revrows"], dirty, ops["tiles"], c_dev, x0_dev,
+                    fx_dev, x,
+                    semiring=ops["semiring"], combine=ops["combine"],
+                    res_kind=a.residual, bs=self.bs,
+                    sweeps=self.sweeps_per_call, eps=float(a.eps),
+                    interpret=self._interpret,
+                )
+
+            real_mask = np.arange(self.x.shape[0]) < self.n
+            out = harness.sweep_batched_loop(
+                batch_fn, jnp.asarray(self.x), jnp.asarray(self.dirty),
+                eps=a.eps, max_iters=max_iters, sweeps=self.sweeps_per_call,
+                nb=self.nb, real_mask=real_mask,
+            )
+            self.dirty = np.asarray(out[7], np.int32)
+        # writable host copy: swap_in mutates columns between batches
+        self.x = np.array(out[0])
+        rep = BatchReport(
+            rounds=int(out[1]),
+            col_done=np.asarray(out[2]),
+            col_rounds=np.asarray(out[3], np.int32),
+        )
+        # fold into the cumulative accounting: columns already done before
+        # this batch only re-verified (their 1-round report is not progress)
+        still_active = ~self.col_done
+        self.col_rounds += np.where(still_active, rep.col_rounds, 0)
+        self.col_done |= rep.col_done
+        return rep

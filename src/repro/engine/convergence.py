@@ -1,4 +1,18 @@
-"""Convergence bookkeeping shared by the engines."""
+"""Convergence bookkeeping shared by the engines.
+
+Besides the :class:`RunResult` container this module holds the one
+implementation of the engines' *per-column* convergence accounting —
+previously duplicated (inline, slightly divergently) between the traced
+round driver ``harness.loop`` and the host-side megakernel driver
+``harness.sweep_batched_loop``. The functions are array-namespace agnostic:
+they use only operators numpy and traced jax arrays share, so the same code
+runs inside ``lax.while_loop`` bodies and on host numpy bookkeeping.
+
+``reinit_columns`` is the *inverse* of the freeze: the serving layer
+(`repro.serving`) swaps a finished query out of a state-matrix column and a
+queued query in mid-run, which means un-converging exactly that column's
+bookkeeping while every other column keeps its progress.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -54,3 +68,56 @@ def trim_trace(residuals, sums, rounds: int) -> tuple[np.ndarray, np.ndarray]:
     residuals = np.asarray(residuals)[:rounds]
     sums = np.asarray(sums)[:rounds]
     return residuals, sums
+
+
+def converge_step(res_col, eps: float, col_done, col_rounds):
+    """One round of per-column convergence accounting.
+
+    ``res_col`` is this round's per-column residual, ``col_done`` /
+    ``col_rounds`` the running bookkeeping. Returns ``(newly_done, active,
+    col_done, col_rounds)``: a column is *active* while not yet converged
+    (it pays this round, so ``col_rounds`` advances), and *newly done* the
+    first round its residual drops to eps. Works on numpy host arrays and
+    on traced jax arrays (pure operators, no namespace-specific calls) —
+    the single implementation behind both round drivers, so the serving
+    layer's swap-in hook has one semantics to invert.
+    """
+    active = ~col_done
+    newly_done = active & (res_col <= eps)
+    return (
+        newly_done,
+        active,
+        col_done | newly_done,
+        col_rounds + active.astype(col_rounds.dtype),
+    )
+
+
+def freeze_columns(x_cand, x_prev, active, newly_done):
+    """Per-column state freezing for the traced round driver.
+
+    Active, not-yet-converged columns advance to the candidate state;
+    columns converging *this* round keep their pre-sweep state (the sweep
+    that measured residual <= eps is a verification sweep — see
+    ``harness.loop``); already-frozen columns stay put bitwise.
+    """
+    import jax.numpy as jnp
+
+    advance = active & ~newly_done
+    return jnp.where(advance[None, :], x_cand, x_prev)
+
+
+def reinit_columns(col_done, col_rounds, cols) -> tuple[np.ndarray, np.ndarray]:
+    """Mid-run per-column re-initialization — the inverse of the freeze.
+
+    Swapping a new query into column j of a resident state matrix
+    (`repro.serving`) resets exactly that column's convergence bookkeeping:
+    done flag cleared, round count zeroed; every other column keeps its
+    progress. Host-side (numpy) — swaps happen between engine batches.
+    Returns fresh arrays; the inputs are not mutated.
+    """
+    col_done = np.asarray(col_done).copy()
+    col_rounds = np.asarray(col_rounds).copy()
+    cols = np.asarray(cols, dtype=np.int64).reshape(-1)
+    col_done[cols] = False
+    col_rounds[cols] = 0
+    return col_done, col_rounds

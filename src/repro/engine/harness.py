@@ -29,7 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
-from repro.engine.convergence import RunResult
+from repro.engine.convergence import (
+    RunResult,
+    converge_step,
+    freeze_columns,
+)
 from repro.engine import jax_ops as J
 from repro.graphs.blocked import pack_in_edges, pad_state, padded_n
 from repro.graphs.graph import Graph
@@ -97,6 +101,61 @@ def init_state(
     return out
 
 
+def swap_in_column(
+    x: np.ndarray, x0: np.ndarray, c: np.ndarray, fixed: np.ndarray,
+    j: int, n: int,
+    q_x0: np.ndarray, q_c: np.ndarray, q_fixed: np.ndarray,
+) -> None:
+    """Mid-run per-column re-init — the inverse of :func:`loop`'s freeze.
+
+    The serving layer's continuous batching resolves a converged column and
+    packs a *queued* query into its slot between engine batches: overwrite
+    column ``j`` of the packed ``(npad, d)`` operand matrices with the
+    newcomer's vertex arrays and reset the resident state column to the
+    newcomer's ``x0``. Rows ``>= n`` are padding and keep their fills (the
+    fills are per-family constants, identical for every column, so a swap
+    never has to re-pad). Mutates the arrays in place; the companion
+    bookkeeping reset is :func:`repro.engine.convergence.reinit_columns`.
+    """
+    x0[:n, j] = np.asarray(q_x0, x0.dtype).reshape(-1)
+    c[:n, j] = np.asarray(q_c, c.dtype).reshape(-1)
+    fixed[:n, j] = np.asarray(q_fixed, fixed.dtype).reshape(-1)
+    x[:, j] = x0[:, j]
+
+
+# The value an *untouched* vertex holds at the start of every workload the
+# constructors build: 0 for the additive semiring, the +BIG sentinel for
+# min-reduce (unreached SSSP/BFS/CC), 0 for max-reduce (SSWP width /
+# reachability indicator of an unreached vertex). Vertices whose x0 differs
+# from this — sources, seeds, pinned targets — are a query's *inputs*.
+X0_FILL = {"sum": 0.0, "min": 3.0e38, "max": 0.0}
+
+
+def column_support(
+    q_x0: np.ndarray, q_c: np.ndarray, q_fixed: np.ndarray,
+    *, reduce: str, c_fill: float, x: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """bool[n] — the vertices a query's column actually involves.
+
+    A vertex is in a query's support when the query *injects* something at
+    it (``x0`` off the workload's untouched-vertex fill, ``c`` off the pack
+    fill, or pinned) or — when a finished state ``x`` is supplied — when the
+    run *moved* it off ``x0``. Everything outside the support holds the
+    inert fill through the whole run, which is what lets (a) a swapped-in
+    column seed only its support blocks into the megakernel's dirty
+    frontier, and (b) the result cache keep an entry alive across a graph
+    delta that touches no supported block (`repro.serving.cache`).
+    """
+    q_x0 = np.asarray(q_x0).reshape(-1)
+    q_c = np.asarray(q_c).reshape(-1)
+    q_fixed = np.asarray(q_fixed).reshape(-1)
+    support = (q_x0 != np.float32(X0_FILL[reduce])) | (q_c != np.float32(c_fill))
+    support |= q_fixed.astype(bool)
+    if x is not None:
+        support |= np.asarray(x).reshape(-1) != q_x0
+    return support
+
+
 # Aitken extrapolation clamps the contraction-rate estimate here: a rho this
 # close to 1 amplifies the current step by rho/(1-rho) = 19x, which a
 # contracting base iteration recovers from in a few sweeps even when the
@@ -156,8 +215,9 @@ def loop(
         xm_cand = mask_rows(x_cand)
         xm_old = mask_rows(x)
         res_col = J.residual_cols(res_kind, xm_cand, xm_old)
-        active = ~col_done
-        newly_done = active & (res_col <= eps)
+        newly_done, active, col_done, col_rounds = converge_step(
+            res_col, eps, col_done, col_rounds
+        )
         x_keep = x_cand
         norm_col = prev_norm  # untouched dummy when extrapolation is off
         if extrapolate_every:  # static — off pays no per-round norm work
@@ -172,10 +232,7 @@ def loop(
             x_keep = x_cand + (xm_cand - xm_old) * factor[None, :]
         # columns converging this round keep their pre-sweep state (see
         # docstring); already-frozen columns stay put; active ones advance
-        advance = active & ~newly_done
-        x_new = jnp.where(advance[None, :], x_keep, x)
-        col_rounds = col_rounds + active.astype(jnp.int32)
-        col_done = col_done | newly_done
+        x_new = freeze_columns(x_keep, x, active, newly_done)
         res_buf = res_buf.at[k].set(jnp.max(jnp.where(active, res_col, 0.0)))
         xm = mask_rows(x_new)
         sum_buf = sum_buf.at[k].set(
@@ -222,9 +279,11 @@ def sweep_batched_loop(
     or past the sticky per-column stop (their results are kept).
 
     Returns ``(x, k, col_done, col_rounds, res_trace, sum_trace,
-    active_trace)`` — the :func:`loop` tuple shape plus the per-sweep
+    active_trace, dirty)`` — the :func:`loop` tuple shape plus the per-sweep
     active-block-fraction trace (``state_sums`` has batch granularity: the
-    post-batch sum is attributed to each of the batch's sweeps).
+    post-batch sum is attributed to each of the batch's sweeps) and the
+    final dirty-block bitmap, which a serving session carries into its next
+    batch so the frontier survives column swaps.
     """
     x = x0
     dirty = dirty0
@@ -248,18 +307,17 @@ def sweep_batched_loop(
             if k >= max_iters or col_done.all():
                 break
             res_col = deltas_np[s]
-            active_cols = ~col_done
-            newly = active_cols & (res_col <= eps)
-            col_rounds += active_cols.astype(np.int32)
+            _, active_cols, col_done, col_rounds = converge_step(
+                res_col, eps, col_done, col_rounds
+            )
             res_trace.append(float(np.max(np.where(active_cols, res_col, 0.0))))
             sum_trace.append(batch_sum)
             act_trace.append(float(active_np[s, 0]) / max(1, nb))
-            col_done |= newly
             k += 1
     return (
         x, k, col_done, col_rounds,
         np.asarray(res_trace, np.float32), np.asarray(sum_trace, np.float32),
-        np.asarray(act_trace, np.float32),
+        np.asarray(act_trace, np.float32), dirty,
     )
 
 

@@ -75,6 +75,18 @@ class GraphDelta:
         """Total number of edge updates in the batch."""
         return len(self.add_src) + len(self.del_src) + len(self.rew_src)
 
+    def touched_vertices(self) -> np.ndarray:
+        """Sorted unique endpoints of every mutated edge (new-id space) —
+        the vertex set whose update equations this delta can directly
+        invalidate. The serving layer's cache invalidation and frontier
+        seeding both start from this set's blocks; appended vertices
+        without edges are deliberately absent (nothing can have depended
+        on them)."""
+        return np.unique(np.concatenate([
+            self.add_src, self.add_dst, self.del_src, self.del_dst,
+            self.rew_src, self.rew_dst,
+        ]).astype(np.int64))
+
     def apply(self, g: Graph) -> Graph:
         """Return the mutated graph; ``g`` is left untouched."""
         n_new = g.n + self.n_add

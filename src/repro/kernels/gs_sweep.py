@@ -76,10 +76,33 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.semirings import ACC_IDENTITY, DELTA_METRIC, delta_cols
+
+
+def or_dirty_blocks(dirty, vertex_mask, n: int, bs: int) -> np.ndarray:
+    """OR a vertex-level support mask into a per-row-block dirty bitmap.
+
+    This is the frontier seeding for a *column subset*: when the serving
+    layer swaps a new query into one column of a resident state matrix, only
+    the blocks whose update equations the newcomer's injection invalidates —
+    its support (seeds/sources/pinned vertices, `engine.harness.
+    column_support`) plus the vertices the support's out-edges feed — stop
+    being self-consistent; OR-ing them into the carried bitmap makes the
+    next megakernel batch re-touch exactly what the newcomer needs, while
+    blocks that are clean for every other in-flight column stay skipped.
+    Sound because the clean contract is per-block over *all* columns and an
+    unsupported vertex of the fresh column whose in-neighbors are all
+    unsupported holds its inert fill, whose update is a bitwise no-op until
+    an in-neighbor moves (and the kernel re-marks dependents when one does).
+    """
+    from repro.graphs.blocked import frontier_blocks
+
+    add = frontier_blocks(np.asarray(vertex_mask), n, bs)
+    return np.maximum(np.asarray(dirty, np.int32), add).astype(np.int32)
 
 # semiring/combine pairs the kernel body implements, with the accumulator
 # identity (kernels.semirings.ACC_IDENTITY) each reduction starts from.

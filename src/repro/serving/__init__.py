@@ -1,0 +1,16 @@
+from repro.serving.cache import CacheEntry, ResultCache
+from repro.serving.scheduler import POLICIES, Scheduler, family_key
+from repro.serving.server import GraphServer, Ticket
+from repro.serving.stats import ServerStats, percentile
+
+__all__ = [
+    "GraphServer",
+    "Ticket",
+    "ResultCache",
+    "CacheEntry",
+    "Scheduler",
+    "POLICIES",
+    "family_key",
+    "ServerStats",
+    "percentile",
+]

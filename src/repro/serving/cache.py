@@ -1,0 +1,111 @@
+"""Graph-version result cache with delta-region invalidation.
+
+Entries are keyed by ``(algo, canonical params)`` and carry the
+``graph_version`` they were computed at; a lookup hits only when the entry's
+version matches the server's current one. The point of the design is what
+happens when a :class:`~repro.graphs.delta.GraphDelta` lands: instead of
+flushing everything, :meth:`ResultCache.apply_delta` *promotes* to the new
+version every entry whose cached **support blocks** miss the delta-touched
+blocks, and drops the rest.
+
+Why that rule is sound (and not just a heuristic): an entry's support is the
+block set where its answer or its inputs deviate from the workload's inert
+fill (`engine.harness.column_support` with the finished state folded in —
+reached vertices, seeds, pinned targets). A delta edge can only change the
+query's fixpoint by injecting or removing influence along a path from the
+query's inputs; the *first* delta edge on any such path leaves a supported
+vertex, so its endpoint block intersects the support and the entry is
+dropped. Mutations entirely among unsupported (inert-valued) vertices
+contribute the semiring's absorbing fill exactly as before and cannot move
+any supported value. Appended vertices that survive promotion are
+unreachable from the entry's inputs by the same argument, so the promoted
+state extends with the workload's inert fill. Global-support workloads
+(pagerank: ``c > 0`` everywhere) have every block in their support and are
+invalidated by any edge delta — the correct, conservative outcome.
+
+Block granularity matches the serving engine's ``bs``: coarser than vertex
+granularity, so strictly more conservative, never less sound.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    x: np.ndarray               # finished (n,) state of the query
+    rounds: int                 # rounds the computing run took
+    support_blocks: frozenset   # block ids the answer/inputs touch
+    graph_version: int
+    x0_fill: float              # inert fill — extends x when n grows
+    hits: int = 0
+
+
+class ResultCache:
+    """(algo, params, graph_version)-keyed results, region-invalidated."""
+
+    def __init__(self):
+        self._entries: dict[tuple, CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidated = 0
+        self.promoted = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: tuple, graph_version: int):
+        """The cached entry for ``key`` at ``graph_version``, else None."""
+        e = self._entries.get(key)
+        if e is None or e.graph_version != graph_version:
+            self.misses += 1
+            return None
+        self.hits += 1
+        e.hits += 1
+        return e
+
+    def put(
+        self, key: tuple, x: np.ndarray, rounds: int,
+        support_blocks, graph_version: int, x0_fill: float,
+    ) -> None:
+        self._entries[key] = CacheEntry(
+            x=np.asarray(x).copy(), rounds=int(rounds),
+            support_blocks=frozenset(int(b) for b in support_blocks),
+            graph_version=graph_version, x0_fill=float(x0_fill),
+        )
+
+    def apply_delta(
+        self, touched_blocks, new_version: int, n_new: int | None = None,
+    ) -> None:
+        """Promote entries untouched by the delta; drop the rest.
+
+        ``touched_blocks`` — block ids containing any endpoint of a
+        mutated (added/deleted/reweighted) edge. ``n_new`` extends promoted
+        states with their inert fill when the delta appended vertices.
+        """
+        touched = frozenset(int(b) for b in touched_blocks)
+        keep: dict[tuple, CacheEntry] = {}
+        for key, e in self._entries.items():
+            if e.graph_version != new_version - 1 or (e.support_blocks & touched):
+                self.invalidated += 1
+                continue
+            e.graph_version = new_version
+            if n_new is not None and n_new > len(e.x):
+                e.x = np.concatenate([
+                    e.x,
+                    np.full(n_new - len(e.x), e.x0_fill, e.x.dtype),
+                ])
+            keep[key] = e
+            self.promoted += 1
+        self._entries = keep
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "invalidated": self.invalidated,
+            "promoted": self.promoted,
+        }

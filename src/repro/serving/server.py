@@ -1,0 +1,472 @@
+"""Continuous-batching GraphServer — the serving front end over the engines.
+
+The paper cuts *rounds per query*; PRs 1–4 cut *cost per round*. What was
+still missing for the ROADMAP's "serve heavy traffic" north star is the
+layer between a query stream and the engines: a static f32[n, d] batch
+wastes its converged columns, because per-query round counts are heavily
+skewed (paper Fig. 7) and every finished query's slot idles until the
+slowest one drains. :class:`GraphServer` is the graph analogue of an LLM
+server's continuous batching:
+
+* :meth:`submit` files a :class:`Ticket`. Queries of the same *family*
+  (same algorithm structure — edges, semiring, combine, eps; see
+  `scheduler.family_key`) share one resident state matrix whose columns are
+  slots.
+* The event loop (:meth:`step`) packs queued tickets into free columns,
+  runs a bounded batch of engine rounds (`engine.async_block.
+  AsyncBlockSession` — the shared harness with per-column freezing), and on
+  per-column convergence **swaps the finished column out and a queued query
+  in**: the newcomer's ``x0``/``c``/``fixed`` overwrite the column
+  (`harness.swap_in_column`), its convergence bookkeeping resets
+  (`convergence.reinit_columns` semantics), and under the pallas megakernel
+  its support blocks are OR-ed into the dirty frontier
+  (`kernels.gs_sweep.or_dirty_blocks`) so only what the newcomer needs is
+  re-touched.
+* Results land in a graph-version cache (`serving.cache`) keyed by
+  ``(algo, params, graph_version)``; a later identical submit is served
+  without running anything.
+* :meth:`apply_delta` ingests a live :class:`~repro.graphs.delta.
+  GraphDelta` between batches: the graph version bumps, cache entries whose
+  support intersects the delta-touched blocks are invalidated (the rest are
+  promoted), and in-flight queries either continue warm
+  (``delta_mode="warm"``, reusing `engine.incremental`'s warm-state /
+  affected-region machinery) or restart on the new graph
+  (``delta_mode="restart"``, keeping per-query round counts solo-exact).
+
+Correctness contract (mirrors PR 4, enforced by ``tests/test_serving.py``):
+a query's resolved state and round count equal a solo ``run_async_block``
+of the same query on the graph version it ran against — bitwise for
+min/max semirings, within eps for sum semirings — for *any* arrival
+schedule, batch granularity, and admission policy, because state-matrix
+columns are independent under every sweep and batch boundaries are
+invisible to a column's trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.engine import harness
+from repro.engine.algorithms import ALGORITHMS, AlgoInstance, get_algorithm, remake
+from repro.engine.async_block import AsyncBlockSession
+from repro.engine.incremental import (
+    affected_region,
+    instance_edge_diff,
+    warm_state,
+)
+from repro.graphs.delta import GraphDelta
+from repro.graphs.graph import Graph
+from repro.serving.cache import ResultCache
+from repro.serving.scheduler import Scheduler, canon, family_key
+from repro.serving.stats import ServerStats
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted query, tracked from admission to resolution."""
+
+    id: int
+    algo: str
+    params: dict
+    priority: int
+    deadline: Optional[float]     # seconds after submit (EDF policy input)
+    family: tuple
+    submitted_at: float
+    graph_version: int            # version submitted at; updated on resolve
+    status: str = "queued"        # queued | running | done | cached | failed
+    started_at: Optional[float] = None
+    resolved_at: Optional[float] = None
+    rounds: int = 0               # engine rounds this query consumed
+    converged: bool = False
+    from_cache: bool = False
+    result: Optional[np.ndarray] = None   # (n,) state at resolution
+    error: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status in ("done", "cached", "failed")
+
+
+@dataclasses.dataclass
+class _Family:
+    """One resident state matrix + its slot bookkeeping."""
+
+    key: tuple
+    probe: AlgoInstance                 # d = 1 structural reference
+    session: AsyncBlockSession
+    tickets: list                       # Optional[Ticket] per slot
+    queries: list                       # Optional[AlgoInstance] per slot
+    # (ticket_id, instance) built by _ensure_family's probe pass, consumed
+    # by _fill_slots so the family-opening query isn't constructed twice
+    probe_cache: Optional[tuple] = None
+
+    def free_slots(self) -> list[int]:
+        return [j for j, t in enumerate(self.tickets) if t is None]
+
+    def occupied(self) -> list[tuple[int, Ticket]]:
+        return [(j, t) for j, t in enumerate(self.tickets) if t is not None]
+
+
+class GraphServer:
+    """Continuous-batching query server over one (evolving) graph.
+
+    Parameters
+    ----------
+    graph : the served graph (mutated only through :meth:`apply_delta`).
+    slots : columns per family's resident state matrix (the ``d`` of the
+        f32[n, d] batches).
+    rounds_per_batch : engine rounds between swap opportunities. Smaller =
+        tighter refill latency, more host round-trips; must be a multiple
+        of ``sweeps_per_call``.
+    backend / inner / sweeps_per_call / bs : forwarded to
+        `engine.async_block.AsyncBlockSession`.
+    policy : admission order — "fifo" | "priority" | "deadline".
+    cache : enable the graph-version result cache.
+    refill : "continuous" (swap per converged column — the point of this
+        module) or "static" (refill only when every slot resolved; the
+        benchmark baseline).
+    delta_mode : in-flight queries across :meth:`apply_delta` — "warm"
+        (keep progress; min/max still resolve bitwise-exact states, sum
+        within eps; round counts reflect the warm continuation) or
+        "restart" (recompute from x0 on the new graph; round counts stay
+        solo-exact).
+    """
+
+    def __init__(
+        self, graph: Graph, *, slots: int = 8, bs: int = 64,
+        rounds_per_batch: int = 8, inner: int = 1, backend: str = "jax",
+        sweeps_per_call: int = 1, policy: str = "fifo", cache: bool = True,
+        refill: str = "continuous", delta_mode: str = "warm",
+        max_rounds_per_query: int = 2000,
+    ):
+        if refill not in ("continuous", "static"):
+            raise ValueError(f"unknown refill mode {refill!r}")
+        if delta_mode not in ("warm", "restart"):
+            raise ValueError(f"unknown delta_mode {delta_mode!r}")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if rounds_per_batch < 1:
+            # 0 would run zero-round batches forever without ever resolving
+            raise ValueError(
+                f"rounds_per_batch must be >= 1, got {rounds_per_batch}"
+            )
+        if sweeps_per_call < 1:
+            raise ValueError(f"sweeps_per_call must be >= 1, got {sweeps_per_call}")
+        if rounds_per_batch % sweeps_per_call:
+            raise ValueError(
+                "rounds_per_batch must be a multiple of sweeps_per_call "
+                "(the megakernel advances whole batches of sweeps)"
+            )
+        self.g = graph
+        self.slots = slots
+        self.bs = bs
+        self.rounds_per_batch = rounds_per_batch
+        self.inner = inner
+        self.backend = backend
+        self.sweeps_per_call = sweeps_per_call
+        self.refill = refill
+        self.delta_mode = delta_mode
+        self.max_rounds_per_query = max_rounds_per_query
+        self.graph_version = 0
+        self.scheduler = Scheduler(policy)
+        self.cache = ResultCache() if cache else None
+        self.stats = ServerStats(slots=slots)
+        # LIVE (queued/running) tickets only: terminal transitions drop the
+        # entry so a long-running server doesn't retain every (n,) result
+        # ever served — the caller's own Ticket reference from submit()
+        # keeps the result alive exactly as long as the caller wants it
+        self.tickets: dict[int, Ticket] = {}
+        self._families: dict[tuple, _Family] = {}
+        self._next_id = 0
+
+    # ------------------------------------------------------------------ API
+
+    def submit(
+        self, algo: str, params: Optional[dict] = None, *,
+        priority: int = 0, deadline: Optional[float] = None,
+    ) -> Ticket:
+        """File a query; returns its :class:`Ticket` (possibly already
+        resolved from the cache). One query per ticket — batched
+        constructors (``ppr`` with one seed, ``sssp`` with one source) are
+        submitted per column."""
+        if algo not in ALGORITHMS:
+            raise KeyError(
+                f"unknown algorithm {algo!r}; one of {sorted(ALGORITHMS)}"
+            )
+        params = dict(params or {})
+        t = Ticket(
+            id=self._next_id, algo=algo, params=params, priority=priority,
+            deadline=deadline, family=family_key(algo, params),
+            submitted_at=self.stats.now(), graph_version=self.graph_version,
+        )
+        self._next_id += 1
+        self.tickets[t.id] = t
+        self.stats.record_submit()
+        if self.cache is not None:
+            entry = self.cache.get((algo, canon(params)), self.graph_version)
+            if entry is not None:
+                t.status = "cached"
+                t.from_cache = True
+                t.converged = True
+                t.result = entry.x.copy()
+                t.resolved_at = self.stats.now()
+                self.tickets.pop(t.id, None)
+                self.stats.record_cache_hit()
+                return t
+        self.scheduler.push(t)
+        return t
+
+    def step(self) -> int:
+        """One server tick: for every family with work, fill free columns
+        from the queue and run one bounded batch of rounds. Returns the
+        number of family batches executed (0 = fully idle)."""
+        keys = list(self._families)
+        keys += [k for k in self.scheduler.families() if k not in self._families]
+        worked = 0
+        for key in keys:
+            fam = self._ensure_family(key)
+            if fam is None:
+                continue
+            self._fill_slots(fam)
+            occupied = fam.occupied()
+            if not occupied:
+                continue
+            rep = fam.session.run_batch(self.rounds_per_batch)
+            self.stats.record_batch(len(occupied), rep.rounds)
+            for j, t in occupied:
+                # the session's cumulative accounting (reset per swap-in,
+                # carried across delta rebuilds) is the single source of
+                # per-query round truth
+                t.rounds = int(fam.session.col_rounds[j])
+                if bool(fam.session.col_done[j]):
+                    self._resolve(fam, j, t, converged=True)
+                elif t.rounds >= self.max_rounds_per_query:
+                    self._resolve(fam, j, t, converged=False)
+            worked += 1
+        return worked
+
+    def run(self, max_steps: Optional[int] = None) -> dict:
+        """Drive :meth:`step` until every submitted ticket resolved (or
+        ``max_steps``); returns ``stats.summary()``."""
+        steps = 0
+        while self.scheduler.total_pending() or self._busy():
+            if max_steps is not None and steps >= max_steps:
+                break
+            if self.step() == 0:
+                break
+            steps += 1
+        return self.stats.summary()
+
+    def apply_delta(self, delta: GraphDelta) -> None:
+        """Ingest a live graph mutation between batches.
+
+        Bumps the graph version, region-invalidates the cache (entries
+        whose support misses every delta-touched block are *promoted* to
+        the new version instead), rebuilds each family on the mutated
+        graph, and carries in-flight queries per ``delta_mode``. Queued
+        tickets need nothing: queries are instantiated against the current
+        graph at swap-in time, so a query that arrives the same batch a
+        delta lands simply runs on the new graph.
+        """
+        g_new = delta.apply(self.g)
+        self.graph_version += 1
+        if self.cache is not None:
+            touched = np.unique(delta.touched_vertices() // self.bs)
+            self.cache.apply_delta(touched, self.graph_version, n_new=g_new.n)
+        self.g = g_new
+        self.stats.deltas_applied += 1
+        for fam in self._families.values():
+            self._rebuild_family(fam)
+
+    # ------------------------------------------------------------ internals
+
+    def _busy(self) -> bool:
+        return any(f.occupied() for f in self._families.values())
+
+    # constructor params that name vertices; validated against the CURRENT
+    # graph at swap-in time — numpy would otherwise accept a negative id
+    # silently (aliasing vertex n+v) and an oversized one as an IndexError
+    # that would escape the per-ticket failure handling
+    _VERTEX_PARAMS = ("source", "target", "seeds", "sources")
+
+    def _build_query(self, t: Ticket) -> AlgoInstance:
+        for name in self._VERTEX_PARAMS:
+            if name in t.params:
+                v = np.asarray(t.params[name]).reshape(-1)
+                if len(v) and (v.min() < 0 or v.max() >= self.g.n):
+                    raise ValueError(
+                        f"{name}={t.params[name]} out of range for a graph "
+                        f"with n={self.g.n} vertices"
+                    )
+        q = get_algorithm(t.algo, self.g, **t.params)
+        if q.d != 1:
+            raise ValueError(
+                f"one query per ticket: {t.algo} with {t.params} builds "
+                f"d={q.d} columns; submit them as separate tickets"
+            )
+        return q
+
+    def _fail(self, t: Ticket, err: Exception) -> None:
+        t.status = "failed"
+        t.error = f"{type(err).__name__}: {err}"
+        t.resolved_at = self.stats.now()
+        self.tickets.pop(t.id, None)
+        self.stats.record_fail()
+
+    def _make_family(self, key: tuple, probe: AlgoInstance) -> _Family:
+        n, d = probe.n, self.slots
+        # idle columns are pinned everywhere: they converge on their first
+        # verification round and can never influence a real query's column
+        idle = dataclasses.replace(
+            probe,
+            x0=np.zeros((n, d), np.float32),
+            c=np.full((n, d), probe.c_pad_fill, np.float32),
+            fixed=np.ones((n, d), bool),
+            exact_fn=None, params=None,
+        )
+        session = AsyncBlockSession(
+            idle, bs=self.bs, inner=self.inner, backend=self.backend,
+            sweeps_per_call=self.sweeps_per_call,
+        )
+        return _Family(
+            key=key, probe=probe, session=session,
+            tickets=[None] * d, queries=[None] * d,
+        )
+
+    def _ensure_family(self, key: tuple) -> Optional[_Family]:
+        fam = self._families.get(key)
+        if fam is not None:
+            return fam
+        while True:
+            t = self.scheduler.peek(key)
+            if t is None:
+                return None
+            try:
+                q = self._build_query(t)
+            except (ValueError, KeyError, TypeError, IndexError) as e:
+                self.scheduler.pop(key)
+                self._fail(t, e)
+                continue
+            # the probe only donates structure; the ticket stays queued and
+            # is admitted through the ordinary _fill_slots path (which
+            # reuses this already-built instance)
+            fam = self._make_family(key, q)
+            fam.probe_cache = (t.id, q)
+            self._families[key] = fam
+            return fam
+
+    def _check_compat(self, fam: _Family, q: AlgoInstance, t: Ticket) -> None:
+        p = fam.probe
+        ok = (
+            p.n == q.n and p.m == q.m and p.semiring == q.semiring
+            and p.combine == q.combine and p.residual == q.residual
+            and p.eps == q.eps
+            and np.array_equal(p.src, q.src) and np.array_equal(p.dst, q.dst)
+            and np.array_equal(p.w, q.w)
+        )
+        if not ok:
+            raise ValueError(
+                f"{t.algo} with {t.params} is structurally incompatible with "
+                f"family {fam.key}; scheduler.COLUMN_PARAMS misclassifies one "
+                f"of its parameters as per-column"
+            )
+
+    def _install(self, fam: _Family, j: int, t: Ticket, q: AlgoInstance) -> None:
+        fam.session.swap_in(j, q.x0[:, 0], q.c[:, 0], q.fixed[:, 0])
+        fam.tickets[j] = t
+        fam.queries[j] = q
+        t.status = "running"
+        if t.started_at is None:   # delta rebuilds re-install running tickets
+            t.started_at = self.stats.now()
+
+    def _fill_slots(self, fam: _Family) -> None:
+        free = fam.free_slots()
+        if self.refill == "static" and len(free) < self.slots:
+            return  # static batching: refill only at the full-batch barrier
+        for j in free:
+            while True:
+                t = self.scheduler.pop(fam.key)
+                if t is None:
+                    return
+                if fam.probe_cache is not None and fam.probe_cache[0] == t.id:
+                    q = fam.probe_cache[1]   # the family's own probe: built
+                    fam.probe_cache = None   # and compat-checked by identity
+                else:
+                    try:
+                        q = self._build_query(t)
+                        self._check_compat(fam, q, t)
+                    except (ValueError, KeyError, TypeError, IndexError) as e:
+                        self._fail(t, e)
+                        continue
+                self._install(fam, j, t, q)
+                break
+
+    def _resolve(self, fam: _Family, j: int, t: Ticket, converged: bool) -> None:
+        q = fam.queries[j]
+        x = fam.session.state[:, j].copy()
+        t.result = x
+        t.converged = converged
+        t.status = "done"
+        t.resolved_at = self.stats.now()
+        t.graph_version = self.graph_version
+        self.tickets.pop(t.id, None)
+        self.stats.record_resolve(t)
+        if self.cache is not None and converged:
+            support = harness.column_support(
+                q.x0[:, 0], q.c[:, 0], q.fixed[:, 0],
+                reduce=q.semiring.reduce, c_fill=q.c_pad_fill, x=x,
+            )
+            blocks = np.unique(np.nonzero(support)[0] // self.bs)
+            self.cache.put(
+                (t.algo, canon(t.params)), x, t.rounds, blocks,
+                self.graph_version,
+                x0_fill=harness.X0_FILL[q.semiring.reduce],
+            )
+        if not converged:
+            # neutralize the slot: a stale non-converged column would keep
+            # every future batch from early-exiting (converged columns are
+            # frozen/fixpoints and cost nothing, so they can stay)
+            n = q.n
+            fam.session.swap_in(
+                j, np.zeros(n, np.float32),
+                np.full(n, q.c_pad_fill, np.float32), np.ones(n, bool),
+            )
+        fam.tickets[j] = None
+        fam.queries[j] = None
+
+    def _rebuild_family(self, fam: _Family) -> None:
+        probe_old = fam.probe
+        probe_new = remake(probe_old, self.g)
+        occupied = [(j, t, fam.queries[j]) for j, t in fam.occupied()]
+        old_state = fam.session.state.copy()   # (n_old, d)
+        new = self._make_family(fam.key, probe_new)
+        region = None
+        if self.delta_mode == "warm" and probe_new.semiring.reduce != "sum":
+            # a loosening delta (deletions / weights moved against the
+            # reduce direction) can invalidate warm values; mask everything
+            # downstream of the loosened edges back to x0 and recompute —
+            # the same regional argument as engine.incremental, which never
+            # needed the prior state to be *converged*, only path-witnessed
+            diff = instance_edge_diff(probe_old, probe_new)
+            if diff.loosening:
+                seeds = np.concatenate([diff.removed_dst, diff.loosened_dst])
+                region = affected_region(probe_new, seeds)
+        for j, t, q_old in occupied:
+            q_new = remake(q_old, self.g)
+            self._install(new, j, t, q_new)
+            if self.delta_mode == "warm":
+                x_warm = warm_state(q_new, q_old, old_state[:, j])
+                if region is not None:
+                    x_warm = np.where(region[:, None], q_new.x0, x_warm)
+                new.session.x[: q_new.n, j] = x_warm[:, 0]
+                # the new session's accounting starts at 0; carry the
+                # rounds the warm continuation already consumed
+                new.session.col_rounds[j] = t.rounds
+            else:
+                t.rounds = 0   # restart: solo-exact counts on the new graph
+        fam.probe = probe_new
+        fam.session = new.session
+        fam.tickets = new.tickets
+        fam.queries = new.queries

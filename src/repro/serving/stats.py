@@ -1,0 +1,134 @@
+"""Serving telemetry: ticket latency, throughput, slot occupancy.
+
+Two clocks run side by side. The *wall* clock (``time.perf_counter``) feeds
+the operational numbers — queries/sec, p50/p99 ticket latency, deadline
+misses. The *round* clock (engine rounds actually executed) feeds the
+numbers the correctness and benchmark contracts are stated in: per-query
+round counts are deterministic (they equal a solo run of the query — see
+`repro.serving.server`), so tests and the CI smoke assert on them while the
+wall numbers ride along for humans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input.
+
+    Nearest-rank keeps the answer an *observed* latency — a p99 users
+    actually experienced — instead of an interpolated value between two
+    observations.
+    """
+    vals = sorted(float(v) for v in values)
+    if not vals:
+        return 0.0
+    rank = max(1, int(-(-q * len(vals) // 100)))  # ceil without math import
+    return vals[min(rank, len(vals)) - 1]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Running counters + traces for one :class:`~repro.serving.GraphServer`."""
+
+    slots: int
+    # sample lists are bounded: when one exceeds max_samples the oldest half
+    # is dropped, so percentiles/occupancy reflect the most recent window
+    # and a long-running server's telemetry memory stays O(max_samples)
+    max_samples: int = 100_000
+    submitted: int = 0
+    resolved: int = 0
+    unconverged: int = 0
+    failed: int = 0            # invalid submissions — never ran a round
+    cache_hits: int = 0        # the cache's own stats() has the full picture
+    batches: int = 0
+    rounds_total: int = 0          # engine rounds executed, all families
+    round_slots_total: int = 0     # rounds x occupied slots (useful work)
+    deltas_applied: int = 0
+    deadline_misses: int = 0
+    occupancy_trace: list = dataclasses.field(default_factory=list)
+    _latency_s: list = dataclasses.field(default_factory=list)
+    _wait_s: list = dataclasses.field(default_factory=list)
+    _rounds: list = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+    _t_last: Optional[float] = None
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def _append(self, samples: list, value) -> None:
+        samples.append(value)
+        if len(samples) > self.max_samples:
+            del samples[: len(samples) // 2]
+
+    def record_submit(self) -> None:
+        self.submitted += 1
+        if self._t0 is None:
+            self._t0 = self.now()
+
+    def record_cache_hit(self) -> None:
+        self.cache_hits += 1
+        self.resolved += 1
+        self._t_last = self.now()
+        self._append(self._latency_s, 0.0)
+        self._append(self._rounds, 0)
+
+    def record_batch(self, occupied: int, rounds: int) -> None:
+        self.batches += 1
+        self.rounds_total += rounds
+        self.round_slots_total += rounds * occupied
+        self._append(self.occupancy_trace, occupied / max(1, self.slots))
+
+    def record_fail(self) -> None:
+        """A submission rejected before running (bad params); kept out of
+        the resolve counters and latency percentiles so parameter errors
+        can't masquerade as engine non-convergence or skew p99."""
+        self.failed += 1
+        self._t_last = self.now()
+
+    def record_resolve(self, ticket) -> None:
+        self.resolved += 1
+        if not ticket.converged:
+            self.unconverged += 1
+        self._t_last = self.now()
+        self._append(self._latency_s, ticket.resolved_at - ticket.submitted_at)
+        if ticket.started_at is not None:
+            self._append(self._wait_s, ticket.started_at - ticket.submitted_at)
+        self._append(self._rounds, ticket.rounds)
+        if ticket.deadline is not None and (
+            ticket.resolved_at - ticket.submitted_at > ticket.deadline
+        ):
+            self.deadline_misses += 1
+
+    def summary(self) -> dict:
+        """One dict with everything a dashboard (or the benchmark JSON)
+        wants; cheap enough to call every tick."""
+        elapsed = (
+            (self._t_last - self._t0)
+            if self._t0 is not None and self._t_last is not None
+            else 0.0
+        )
+        occ = self.occupancy_trace
+        return {
+            "submitted": self.submitted,
+            "resolved": self.resolved,
+            "unconverged": self.unconverged,
+            "failed": self.failed,
+            "cache_hits": self.cache_hits,
+            "batches": self.batches,
+            "rounds_total": self.rounds_total,
+            "round_slots_total": self.round_slots_total,
+            "deltas_applied": self.deltas_applied,
+            "deadline_misses": self.deadline_misses,
+            "elapsed_s": elapsed,
+            "throughput_qps": self.resolved / elapsed if elapsed > 0 else 0.0,
+            "latency_p50_s": percentile(self._latency_s, 50),
+            "latency_p99_s": percentile(self._latency_s, 99),
+            "wait_p50_s": percentile(self._wait_s, 50),
+            "wait_p99_s": percentile(self._wait_s, 99),
+            "rounds_p50": percentile(self._rounds, 50),
+            "rounds_p99": percentile(self._rounds, 99),
+            "occupancy_mean": sum(occ) / len(occ) if occ else 0.0,
+        }
