@@ -16,6 +16,11 @@ continuous/static speedup: >= 1.3x queries/sec on this workload. Rounds
 are deterministic, so the CI smoke asserts the rounds ratio (exact) and
 that wall throughput didn't invert, and uploads ``BENCH_serving.json``
 (repo root, like ``BENCH_kernels.json``) as the cross-PR trajectory.
+
+A third section serves the same stream to TWO tenants of one server
+(identical graphs, so the fair split is deterministic) and reports the
+cross-tenant fairness — min/max share of family batches — which the CI
+smoke gates at >= 0.8 alongside the rounds ratio.
 """
 from __future__ import annotations
 
@@ -99,6 +104,39 @@ def _serve(gw: Graph, sources, refill: str) -> dict:
     }
 
 
+def _serve_multi(gw: Graph, sources) -> dict:
+    """Two tenants, identical graph + query stream each: the round-robin
+    interleave must split family batches evenly (fairness -> 1.0) while
+    every query still resolves. Identical workloads make the fairness
+    number deterministic instead of a property of source luck."""
+    srv = GraphServer(
+        graphs={"a": gw, "b": gw}, slots=SLOTS, bs=BS,
+        rounds_per_batch=ROUNDS_PER_BATCH, refill="continuous", cache=False,
+    )
+    t0 = time.perf_counter()
+    tickets = [
+        srv.submit("sssp", {"source": s}, tenant=name)
+        for s in sources for name in ("a", "b")
+    ]
+    srv.run()
+    dt = time.perf_counter() - t0
+    assert all(t.converged for t in tickets)
+    s = srv.stats.summary()
+    tb, tr = s["tenant_batches"], s["tenant_rounds"]
+    return {
+        "tenants": len(srv.tenants),
+        "qps": len(tickets) / dt,
+        "wall_s": dt,
+        "tenant_batches": tb,
+        "tenant_rounds": tr,
+        # min/max share of family batches across tenants — 1.0 is a
+        # perfectly fair split of the server's attention
+        "fairness": min(tb.values()) / max(1, max(tb.values())),
+        "rounds_total": s["rounds_total"],
+        "occupancy_mean": s["occupancy_mean"],
+    }
+
+
 def run(out_dir: str):
     gw, rank = _skewed_graph()
     rng = np.random.default_rng(0)
@@ -110,6 +148,7 @@ def run(out_dir: str):
 
     cont = _serve(gw, sources, "continuous")
     stat = _serve(gw, sources, "static")
+    multi = _serve_multi(gw, sources[: N_QUERIES // 2])
     speedup_qps = cont["qps"] / max(1e-12, stat["qps"])
     speedup_rounds = stat["rounds_total"] / max(1, cont["rounds_total"])
 
@@ -121,6 +160,7 @@ def run(out_dir: str):
         },
         "continuous": cont,
         "static": stat,
+        "multi_tenant": multi,
         "speedup_qps": speedup_qps,
         "speedup_rounds": speedup_rounds,
     }
@@ -142,5 +182,10 @@ def run(out_dir: str):
         "serving_speedup", 0.0,
         f"qps_ratio={speedup_qps:.2f} rounds_ratio={speedup_rounds:.2f} "
         f"target>=1.30",
+    ))
+    rows.append((
+        "serving_multi_tenant", multi["wall_s"] * 1e6,
+        f"tenants={multi['tenants']} fairness={multi['fairness']:.2f} "
+        f"qps={multi['qps']:.1f} occ={multi['occupancy_mean']:.2f}",
     ))
     return rows

@@ -17,9 +17,8 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax
 
+from repro import get_algorithm, solve
 from repro.core.gograph import gograph_order
-from repro.engine import get_algorithm, run_async_block
-from repro.engine.distributed import run_distributed
 from repro.graphs import generators as gen
 
 
@@ -36,8 +35,8 @@ def main():
     intra = float(np.mean(shard[g2.src] == shard[g2.dst]))
     print(f"intra-shard edge fraction after GoGraph: {intra:.2f}")
 
-    r_single = run_async_block(algo, bs=64)
-    r_dist = run_distributed(algo, bs=64)
+    r_single = solve(algo, engine="async_block", bs=64)
+    r_dist = solve(algo, engine="distributed", bs=64)
     err = np.max(np.abs(r_dist.x - algo.exact()))
     print(f"single-device async rounds: {r_single.rounds}")
     print(f"{ndev}-device hybrid rounds: {r_dist.rounds} (err {err:.1e})")

@@ -22,12 +22,7 @@ import numpy as np
 
 from repro.core.gograph import extend_rank, gograph_order
 from repro.core.metric import positive_edge_fraction
-from repro.engine import (
-    get_algorithm,
-    remake,
-    run_async_block,
-    run_incremental,
-)
+from repro import get_algorithm, remake, run_incremental, solve
 from repro.graphs import generators as gen
 from repro.graphs.delta import random_delta
 
@@ -45,7 +40,7 @@ def main():
     rank = gograph_order(g)
     algo = get_algorithm("pagerank", g)
     t0 = time.perf_counter()
-    prior = run_async_block(algo.relabel(rank), bs=args.bs, inner=2)
+    prior = solve(algo.relabel(rank), bs=args.bs, inner=2)
     x_served = prior.x[rank]  # back to id space: v's value sits at slot rank[v]
     print(f"initial convergence: {prior.rounds} rounds "
           f"({(time.perf_counter() - t0)*1e3:.0f} ms)\n")
@@ -67,7 +62,7 @@ def main():
         )
         t_warm = time.perf_counter() - t0
         t0 = time.perf_counter()
-        cold = run_async_block(algo_new.relabel(rank), bs=args.bs, inner=2)
+        cold = solve(algo_new.relabel(rank), bs=args.bs, inner=2)
         t_cold = time.perf_counter() - t0
 
         drift = float(np.abs(warm.x - cold.x[rank]).max())

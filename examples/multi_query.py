@@ -15,11 +15,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.engine import (
-    multi_source_sssp,
-    personalized_pagerank,
-    run_async_block,
-)
+from repro import multi_source_sssp, personalized_pagerank, solve
 from repro.graphs import generators as gen
 
 
@@ -36,9 +32,9 @@ def main():
     seeds = rng.choice(g.n, size=args.d, replace=False)
 
     algo = personalized_pagerank(g, seeds)
-    run_async_block(algo, bs=args.bs)  # warm the jit cache before timing
+    solve(algo, bs=args.bs)  # warm the jit cache before timing
     t0 = time.perf_counter()
-    r = run_async_block(algo, bs=args.bs)
+    r = solve(algo, bs=args.bs)
     t_batched = time.perf_counter() - t0
     print(f"\nPPR x{args.d} batched: {r.rounds} sweeps "
           f"({t_batched*1e3:.0f} ms, {args.d / t_batched:.1f} queries/s)")
@@ -46,17 +42,17 @@ def main():
           f"median={int(np.median(r.col_rounds))} max={int(r.col_rounds.max())}")
 
     scalar = personalized_pagerank(g, [int(seeds[0])])
-    run_async_block(scalar, bs=args.bs)
+    solve(scalar, bs=args.bs)
     t0 = time.perf_counter()
     for s in seeds[: min(8, args.d)]:
-        run_async_block(personalized_pagerank(g, [int(s)]), bs=args.bs)
+        solve(personalized_pagerank(g, [int(s)]), bs=args.bs)
     t_serial = (time.perf_counter() - t0) / min(8, args.d) * args.d
     print(f"serial x{args.d} (extrapolated): {t_serial*1e3:.0f} ms "
           f"-> batched speedup {t_serial / t_batched:.1f}x")
 
     gw = gen.with_random_weights(g, seed=2)
     sources = rng.choice(g.n, size=min(8, args.d), replace=False)
-    rm = run_async_block(multi_source_sssp(gw, sources), bs=args.bs)
+    rm = solve(multi_source_sssp(gw, sources), bs=args.bs)
     print(f"\nmulti-source SSSP x{len(sources)}: {rm.rounds} sweeps, "
           f"converged={rm.converged}, x shape {rm.x.shape}")
 

@@ -13,9 +13,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro import get_algorithm, solve
 from repro.core import baselines, metric
 from repro.core.gograph import gograph_order
-from repro.engine import get_algorithm, run_async_block, run_sync
 from repro.graphs import generators as gen
 
 
@@ -36,9 +36,9 @@ def main():
 
     # inner=2: one VMEM-local re-iteration per block makes the intra-block
     # edges GoGraph concentrates fresh too (DESIGN.md §3) — free on TPU
-    r_sync = run_sync(algo)
-    r_async = run_async_block(algo, bs=64, inner=2)
-    r_gg = run_async_block(algo_gg, bs=64, inner=2)
+    r_sync = solve(algo, engine="sync")
+    r_async = solve(algo, engine="async_block", bs=64, inner=2)
+    r_gg = solve(algo_gg, engine="async_block", bs=64, inner=2)
 
     print("\nPageRank iteration rounds to 1e-6 convergence:")
     print(f"  sync  + default order : {r_sync.rounds}")

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.graphs import generators as gen
 from repro.graphs.delta import random_delta
-from repro.serving import GraphServer
+from repro import GraphServer
 
 N = 1200
 TICKS = 60

@@ -1,0 +1,74 @@
+"""Public API for the repro package.
+
+The stable, documented surface (see README "API"):
+
+* :func:`repro.solve` / :class:`repro.EngineOptions` — the one entry point
+  to every engine (``sync`` | ``async_block`` | ``distributed``), with all
+  option validation in one place (:class:`repro.EngineOptionsError`).
+* Algorithm constructors — :func:`repro.get_algorithm` and the named
+  builders (``personalized_pagerank``, ``multi_source_sssp``, ...).
+* :func:`repro.run_incremental` — delta-driven recompute over an evolving
+  graph.
+* :class:`repro.GraphServer` / :class:`repro.Ticket` — the multi-tenant
+  continuous-batching serving layer; :class:`repro.GraphDelta` for live
+  graph mutations.
+
+Everything else (``repro.engine``, ``repro.kernels``, ``repro.serving``,
+...) is importable but considered internal; its layout may shift between
+PRs. Attributes here resolve lazily (PEP 562) so ``import repro`` stays
+cheap and subpackages that don't need the engine stack don't pay for it.
+"""
+from __future__ import annotations
+
+__all__ = [
+    # unified engine entry point
+    "solve",
+    "EngineOptions",
+    "EngineOptionsError",
+    "EngineUnsupportedError",
+    # algorithms
+    "get_algorithm",
+    "ALGORITHMS",
+    "AlgoInstance",
+    "personalized_pagerank",
+    "multi_source_sssp",
+    "make_personalized_pagerank",
+    "make_multi_source_sssp",
+    "remake",
+    # engine shims (legacy spellings; thin wrappers over solve())
+    "run_sync",
+    "run_async_block",
+    "run_distributed",
+    # incremental + serving
+    "run_incremental",
+    "GraphDelta",
+    "Graph",
+    "GraphServer",
+    "Ticket",
+]
+
+_ENGINE = {
+    "solve", "EngineOptions", "EngineOptionsError", "EngineUnsupportedError",
+    "get_algorithm", "ALGORITHMS", "AlgoInstance", "personalized_pagerank",
+    "multi_source_sssp", "make_personalized_pagerank",
+    "make_multi_source_sssp", "remake", "run_sync", "run_async_block",
+    "run_distributed", "run_incremental",
+}
+_SERVING = {"GraphServer", "Ticket"}
+_GRAPHS = {"GraphDelta": "repro.graphs.delta", "Graph": "repro.graphs.graph"}
+
+
+def __getattr__(name: str):
+    import importlib
+
+    if name in _ENGINE:
+        return getattr(importlib.import_module("repro.engine"), name)
+    if name in _SERVING:
+        return getattr(importlib.import_module("repro.serving"), name)
+    if name in _GRAPHS:
+        return getattr(importlib.import_module(_GRAPHS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

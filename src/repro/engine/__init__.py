@@ -8,6 +8,12 @@ from repro.engine.algorithms import (
     personalized_pagerank,
     remake,
 )
+from repro.engine.api import (
+    EngineOptions,
+    EngineOptionsError,
+    EngineUnsupportedError,
+    solve,
+)
 from repro.engine.async_block import AsyncBlockSession, run_async_block
 from repro.engine.distributed import run_distributed
 from repro.engine.incremental import permute_state, run_incremental, warm_state
@@ -15,6 +21,10 @@ from repro.engine.priority import run_priority_block
 from repro.engine.sync import run_sync
 
 __all__ = [
+    "solve",
+    "EngineOptions",
+    "EngineOptionsError",
+    "EngineUnsupportedError",
     "get_algorithm",
     "ALGORITHMS",
     "AlgoInstance",

@@ -1,0 +1,208 @@
+"""The one validated entry path to the iterative engines: :func:`solve`.
+
+The engines accreted four ``run_*`` entry points with copy-pasted,
+partially-incompatible keyword surfaces; each validated its own corner of
+the option space (``sweeps_per_call > 1`` on ``backend="jax"`` was rejected
+in two places with two messages, ``extrapolate_every`` in three). This
+module replaces that with a single frozen :class:`EngineOptions` record and
+a single :func:`validate_options` pass, so every invalid combination is
+rejected exactly once, with one exception family:
+
+* :class:`EngineOptionsError` (a ``ValueError``) — the option combination
+  is malformed or not meaningful (unknown engine/backend, non-positive
+  budgets, pallas-only knobs on the pure-JAX backend).
+* :class:`EngineUnsupportedError` (both an :class:`EngineOptionsError` and
+  a ``NotImplementedError``) — the combination is meaningful but this build
+  does not implement it (Aitken extrapolation on a nonlinear lattice
+  semiring, extrapolation under sweep batching).
+
+``except EngineOptionsError`` therefore catches *every* rejection the entry
+path can raise, while pre-existing callers that caught ``ValueError`` or
+``NotImplementedError`` keep working unchanged.
+
+The legacy entry points — ``run_sync`` / ``run_async_block`` /
+``run_distributed`` — survive as thin shims over :func:`solve` with their
+old signatures, and ``run_incremental``'s engine routing goes through
+:func:`solve` too, so there is exactly one dispatch table and one
+validation pass in the package.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Optional
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid a module cycle: the engines import this module
+    from repro.engine.algorithms import AlgoInstance
+    from repro.engine.convergence import RunResult
+
+ENGINES = ("sync", "async_block", "distributed")
+BACKENDS = ("jax", "pallas")
+
+
+class EngineOptionsError(ValueError):
+    """An :class:`EngineOptions` combination the engines reject.
+
+    The single exception family for the entry path: every malformed or
+    unsupported option combination raises this (or the
+    :class:`EngineUnsupportedError` subclass), so callers can guard one
+    ``except EngineOptionsError`` instead of enumerating ValueError /
+    NotImplementedError / KeyError per entry point.
+    """
+
+
+class EngineUnsupportedError(EngineOptionsError, NotImplementedError):
+    """A meaningful option combination this build does not implement.
+
+    Subclasses both :class:`EngineOptionsError` (the family) and
+    ``NotImplementedError`` (what the pre-`solve` entry points raised for
+    these cases), so both old and new handling styles catch it.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Every knob the iterative engines accept, validated in one place.
+
+    x_init : resume/warm-start state overlaid on the algorithm's ``x0``
+        (``(n,)``, ``(n, 1)`` or ``(n, d)`` — see `harness.init_state`).
+    extrapolate_every : Aitken acceleration period for linear sum-semiring
+        systems; 0 = off, otherwise >= 2 (see `harness.loop`).
+    backend : ``"jax"`` (gather/segment-reduce sweeps) or ``"pallas"``
+        (fused flat-BSR kernel; ``engine="async_block"`` only).
+    bs : block size of the processing order (block engines; ignored by
+        ``engine="sync"``, which runs whole-graph Jacobi rounds).
+    inner : per-block refinement sweeps (block engines, jax backend).
+    sweeps_per_call : sweeps batched into one persistent megakernel launch
+        (pallas backend only; > 1 enables in-kernel convergence and
+        active-frontier block skipping).
+    frontier : bool[n] dirty-vertex seed for the megakernel's frontier
+        (pallas backend with ``sweeps_per_call > 1``; None = all dirty).
+    max_iters : round budget.
+    mesh / axis : device mesh for ``engine="distributed"`` (None = one
+        mesh axis over every visible device).
+    """
+
+    x_init: Optional[np.ndarray] = None
+    extrapolate_every: int = 0
+    backend: str = "jax"
+    bs: int = 256
+    inner: int = 1
+    sweeps_per_call: int = 1
+    frontier: Optional[np.ndarray] = None
+    max_iters: int = 2000
+    mesh: Any = None
+    axis: str = "data"
+
+
+def validate_options(
+    engine: str, o: EngineOptions, algo: "AlgoInstance | None" = None
+) -> None:
+    """Reject every invalid (engine, options[, algorithm]) combination.
+
+    The one validation pass behind :func:`solve`, the ``run_*`` shims, and
+    `AsyncBlockSession`. ``algo`` enables the algorithm-dependent checks
+    (extrapolation requires a linear sum semiring); pass None to validate
+    options whose algorithm is not known yet.
+    """
+    if engine not in ENGINES:
+        raise EngineOptionsError(
+            f"unknown engine {engine!r}; one of {sorted(ENGINES)}"
+        )
+    if o.backend not in BACKENDS:
+        raise EngineOptionsError(
+            f"unknown backend {o.backend!r}; one of {sorted(BACKENDS)}"
+        )
+    if o.bs < 1:
+        raise EngineOptionsError(f"bs must be >= 1, got {o.bs}")
+    if o.inner < 1:
+        raise EngineOptionsError(f"inner must be >= 1, got {o.inner}")
+    if o.max_iters < 1:
+        raise EngineOptionsError(f"max_iters must be >= 1, got {o.max_iters}")
+    if o.sweeps_per_call < 1:
+        raise EngineOptionsError(
+            f"sweeps_per_call must be >= 1, got {o.sweeps_per_call}"
+        )
+    if o.backend == "pallas":
+        if engine != "async_block":
+            raise EngineUnsupportedError(
+                f"backend='pallas' runs the fused block-GS sweep and is an "
+                f"engine='async_block' path; engine={engine!r} has no kernel"
+            )
+        if o.inner != 1:
+            raise EngineOptionsError(
+                "backend='pallas' runs the fused sweep; inner must be 1"
+            )
+    elif o.sweeps_per_call != 1 or o.frontier is not None:
+        raise EngineOptionsError(
+            "sweeps_per_call/frontier amortize kernel launches and DMAs — "
+            "pallas-backend knobs; backend='jax' supports neither"
+        )
+    if engine == "sync" and o.inner != 1:
+        raise EngineOptionsError(
+            "engine='sync' runs whole-graph Jacobi rounds; inner is a "
+            "block-engine knob"
+        )
+    if o.extrapolate_every:
+        if algo is not None and algo.semiring.reduce != "sum":
+            raise EngineUnsupportedError(
+                f"extrapolate_every is only valid for linear sum-semiring "
+                f"systems; {algo.name!r} uses reduce={algo.semiring.reduce!r}"
+            )
+        if not o.extrapolate_every >= 2:
+            # a period of 1 jumps every round off a rho estimated from the
+            # previous jump's own step — the amplifications compound with no
+            # contraction rounds between and the iteration diverges to NaN
+            raise EngineOptionsError(
+                f"extrapolate_every must be 0 (off) or >= 2, "
+                f"got {o.extrapolate_every}"
+            )
+        if o.sweeps_per_call > 1 or o.frontier is not None:
+            # both knobs route through the megakernel's batched driver
+            raise EngineUnsupportedError(
+                "extrapolate_every needs per-sweep host control; "
+                "use sweeps_per_call=1"
+            )
+
+
+def solve(
+    algo: "AlgoInstance",
+    engine: str = "async_block",
+    options: Optional[EngineOptions] = None,
+    **overrides,
+) -> "RunResult":
+    """Converge ``algo`` with the chosen engine — the single entry path.
+
+    ``engine``: ``"sync"`` (Jacobi rounds, paper Eq. 1), ``"async_block"``
+    (block Gauss–Seidel, the TPU adaptation of Eq. 2), or ``"distributed"``
+    (shard_map supersteps: synchronous across shards, Gauss–Seidel within).
+
+    ``options`` is an :class:`EngineOptions`; keyword ``overrides`` are
+    applied on top (``solve(algo, "async_block", bs=64)`` is shorthand for
+    ``solve(algo, "async_block", options=EngineOptions(bs=64))``). All
+    validation happens here, in :func:`validate_options`, before any engine
+    code runs; the legacy ``run_*`` entry points are shims over this
+    function, parity-tested bitwise for the min/max semirings.
+    """
+    o = options if options is not None else EngineOptions()
+    if overrides:
+        try:
+            o = dataclasses.replace(o, **overrides)
+        except TypeError:
+            bad = sorted(set(overrides) - {f.name for f in dataclasses.fields(o)})
+            raise EngineOptionsError(
+                f"unknown EngineOptions field(s) {bad}; valid fields: "
+                f"{[f.name for f in dataclasses.fields(o)]}"
+            ) from None
+    validate_options(engine, o, algo)
+    # lazy imports: the engine modules import this module for the error
+    # family and the shims, so the dispatch edge must not exist at import time
+    from repro.engine import async_block, distributed, sync
+
+    impl = {
+        "sync": sync._solve,
+        "async_block": async_block._solve,
+        "distributed": distributed._solve,
+    }[engine]
+    return impl(algo, o)

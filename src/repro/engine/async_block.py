@@ -117,13 +117,45 @@ def _run_pallas(
     )
 
 
+def _solve(algo: AlgoInstance, o) -> RunResult:
+    """Engine body behind ``solve(algo, engine="async_block", ...)``; options
+    are already validated (`engine.api.validate_options`)."""
+    if o.backend == "pallas":
+        return _run_async_block_pallas(
+            algo, o.bs, o.max_iters, o.inner, o.x_init,
+            extrapolate_every=o.extrapolate_every,
+            sweeps_per_call=o.sweeps_per_call, frontier=o.frontier,
+        )
+    be, x0, c, fixed, npad = harness.pack(algo, o.bs)
+    x_start = harness.init_state(x0, o.x_init, algo.n)
+    out = _run(
+        jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
+        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(x0),
+        jnp.asarray(c), jnp.asarray(fixed),
+        bs=o.bs, nb=be.nb, n_real=algo.n,
+        sem_reduce=algo.semiring.reduce,
+        sem_edge=algo.semiring.edge_op,
+        comb=algo.combine,
+        res_kind=algo.residual,
+        eps=algo.eps,
+        max_iters=o.max_iters,
+        identity=algo.semiring.identity,
+        inner=o.inner,
+        extrapolate_every=o.extrapolate_every,
+    )
+    return harness.finalize(algo, *out)
+
+
 def run_async_block(
     algo: AlgoInstance, bs: int = 256, max_iters: int = 2000, inner: int = 1,
     x_init: np.ndarray | None = None, backend: str = "jax",
     extrapolate_every: int = 0, sweeps_per_call: int = 1,
     frontier: np.ndarray | None = None,
 ) -> RunResult:
-    """x_init: resume from a previous state (checkpointed macro-stepping or
+    """Thin shim over ``solve(algo, engine="async_block")`` — the legacy
+    keyword spelling, parity-tested bitwise against `engine.api.solve`.
+
+    x_init: resume from a previous state (checkpointed macro-stepping or
     the incremental serving engine's warm starts).
 
     backend: "jax" (gather/segment-reduce sweep) or "pallas" (fused
@@ -143,50 +175,29 @@ def run_async_block(
     its block's state already satisfies its update equation; None = all
     dirty (the only safe cold-start value).
     """
-    harness.check_extrapolation(algo, extrapolate_every)
-    if backend == "pallas":
-        return _run_async_block_pallas(
-            algo, bs, max_iters, inner, x_init,
-            extrapolate_every=extrapolate_every,
-            sweeps_per_call=sweeps_per_call, frontier=frontier,
-        )
-    if backend != "jax":
-        raise ValueError(f"unknown backend {backend!r}")
-    if sweeps_per_call != 1 or frontier is not None:
-        raise ValueError(
-            "sweeps_per_call/frontier amortize kernel launches and DMAs — "
-            "pallas-backend knobs; backend='jax' supports neither"
-        )
-    be, x0, c, fixed, npad = harness.pack(algo, bs)
-    x_start = harness.init_state(x0, x_init, algo.n)
-    out = _run(
-        jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
-        jnp.asarray(be.emask), jnp.asarray(x_start), jnp.asarray(x0),
-        jnp.asarray(c), jnp.asarray(fixed),
-        bs=bs, nb=be.nb, n_real=algo.n,
-        sem_reduce=algo.semiring.reduce,
-        sem_edge=algo.semiring.edge_op,
-        comb=algo.combine,
-        res_kind=algo.residual,
-        eps=algo.eps,
-        max_iters=max_iters,
-        identity=algo.semiring.identity,
-        inner=inner,
-        extrapolate_every=extrapolate_every,
-    )
-    return harness.finalize(algo, *out)
+    from repro.engine.api import EngineOptions, solve
+
+    return solve(algo, engine="async_block", options=EngineOptions(
+        x_init=x_init, extrapolate_every=extrapolate_every, backend=backend,
+        bs=bs, inner=inner, sweeps_per_call=sweeps_per_call,
+        frontier=frontier, max_iters=max_iters,
+    ))
 
 
 def _run_async_block_pallas(
     algo, bs, max_iters, inner, x_init, interpret=None, extrapolate_every=0,
     sweeps_per_call=1, frontier=None,
 ) -> RunResult:
+    from repro.engine.api import EngineOptions, validate_options
     from repro.kernels.ops import _auto_interpret, pack_algorithm
 
-    if inner != 1:
-        raise ValueError("backend='pallas' runs the fused sweep; inner must be 1")
-    if sweeps_per_call < 1:
-        raise ValueError(f"sweeps_per_call must be >= 1, got {sweeps_per_call}")
+    # also reachable through the kernels.ops back-compat shim, which skips
+    # solve(); route its options through the same single validation pass
+    validate_options("async_block", EngineOptions(
+        x_init=x_init, extrapolate_every=extrapolate_every, backend="pallas",
+        bs=bs, inner=inner, sweeps_per_call=sweeps_per_call,
+        frontier=frontier, max_iters=max_iters,
+    ), algo)
     ops = pack_algorithm(algo, bs)
     x_start = harness.init_state(np.asarray(ops["x0"]), x_init, algo.n)
     if sweeps_per_call == 1 and frontier is None:
@@ -199,13 +210,6 @@ def _run_async_block_pallas(
             extrapolate_every=extrapolate_every,
         )
         return harness.finalize(algo, *out)
-    # sweep-batched megakernel path: host checks once per batch, so the
-    # per-round Aitken bookkeeping of harness.loop has nothing to hook into
-    if extrapolate_every:
-        raise NotImplementedError(
-            "extrapolate_every needs per-sweep host control; "
-            "use sweeps_per_call=1"
-        )
     from repro.graphs.blocked import frontier_blocks
     from repro.kernels.gs_sweep import gs_multisweep_pallas
 
@@ -264,14 +268,27 @@ class AsyncBlockSession:
     rounds the slot's **current** query has consumed since its swap-in —
     the number the serving layer bills to its ticket.
 
-    Backends mirror `run_async_block`: ``"jax"`` (gather/segment-reduce
-    sweep) and ``"pallas"`` (fused flat-BSR kernel). With
-    ``sweeps_per_call > 1`` the persistent megakernel runs and the
-    dirty-block frontier bitmap is carried across batches *and* swaps: a
-    swapped-in column ORs exactly its support blocks into the bitmap
-    (`kernels.gs_sweep.or_dirty_blocks`), so the kernel only re-touches
-    what the newcomer needs while blocks clean for every in-flight column
-    stay skipped.
+    The session is **device-resident**: the packed state matrix, the operand
+    matrices (``x0``/``c``/``fixed``), the dirty-block bitmap, and the
+    cumulative per-column accounting all live as jax arrays for the
+    session's whole life. Batches chain device-to-device (the next batch
+    consumes the previous batch's output buffer), swaps are jitted
+    functional column updates with a traced slot index
+    (`harness.swap_in_column_device` — only the newcomer's three length-n
+    vectors transfer H2D), and the only host transfers are the tiny
+    ``(d,)`` per-batch report and whatever the serving layer reads at
+    ticket resolution via :attr:`state`.
+
+    Backends mirror `solve`: ``"jax"`` (gather/segment-reduce sweep),
+    ``"pallas"`` (fused flat-BSR kernel), and ``"distributed"`` (the
+    shard_map superstep of `engine.distributed.DistContext`, for families
+    whose resident state spans devices; ``mesh``/``axis`` select the
+    device mesh). With ``sweeps_per_call > 1`` the persistent megakernel
+    runs and the dirty-block frontier bitmap is carried across batches
+    *and* swaps: a swapped-in column ORs exactly its support blocks into
+    the bitmap (`kernels.gs_sweep.or_dirty_blocks`), so the kernel only
+    re-touches what the newcomer needs while blocks clean for every
+    in-flight column stay skipped.
 
     A column's trajectory from swap-in to convergence is exactly what a
     solo `run_async_block` of that query produces: sweeps act columnwise
@@ -285,16 +302,16 @@ class AsyncBlockSession:
     def __init__(
         self, algo: AlgoInstance, bs: int = 256, inner: int = 1,
         backend: str = "jax", sweeps_per_call: int = 1,
-        interpret: bool | None = None,
+        interpret: bool | None = None, mesh=None, axis: str = "data",
     ):
-        if backend not in ("jax", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if sweeps_per_call < 1:
-            raise ValueError(f"sweeps_per_call must be >= 1, got {sweeps_per_call}")
-        if backend == "jax" and sweeps_per_call != 1:
-            raise ValueError("sweeps_per_call > 1 is a pallas-backend knob")
-        if backend == "pallas" and inner != 1:
-            raise ValueError("backend='pallas' runs the fused sweep; inner must be 1")
+        from repro.engine.api import EngineOptions, validate_options
+
+        engine = "distributed" if backend == "distributed" else "async_block"
+        validate_options(engine, EngineOptions(
+            backend="jax" if backend == "distributed" else backend,
+            bs=bs, inner=inner, sweeps_per_call=sweeps_per_call,
+            mesh=mesh, axis=axis,
+        ), algo)
         self.algo = algo
         self.bs = bs
         self.inner = inner
@@ -308,7 +325,18 @@ class AsyncBlockSession:
             self._edges = tuple(
                 jnp.asarray(a) for a in (be.esrc, be.edst, be.ew, be.emask)
             )
-            self.x0, self.c, self.fixed = x0, c, fixed
+            self.x0 = jnp.asarray(x0)
+            self.c = jnp.asarray(c)
+            self.fixed = jnp.asarray(fixed)
+        elif backend == "distributed":
+            from repro.engine.distributed import DistContext
+
+            self._dist = DistContext(algo, bs, mesh=mesh, axis=axis,
+                                     inner=inner)
+            self.nb = self._dist.nb
+            self.x0 = jnp.asarray(self._dist.x0)
+            self.c = jnp.asarray(self._dist.c)
+            self.fixed = jnp.asarray(self._dist.fixed)
         else:
             from repro.kernels.ops import _auto_interpret, pack_algorithm
 
@@ -316,33 +344,43 @@ class AsyncBlockSession:
             self._ops = ops
             self._interpret = _auto_interpret(interpret)
             self.nb = int(ops["rowptr"].shape[0]) - 1
-            self.x0 = np.asarray(ops["x0"]).copy()
-            self.c = np.asarray(ops["c"]).copy()
-            self.fixed = np.asarray(ops["fixed"]).copy()
+            self.x0 = ops["x0"]
+            self.c = ops["c"]
+            self.fixed = ops["fixed"]
             # cold start: every block dirty (the only safe default; swaps
             # and batches keep the bitmap faithful from here on)
-            self.dirty = np.ones(self.nb, np.int32)
-        self.x = self.x0.copy()
+            self.dirty = jnp.ones(self.nb, jnp.int32)
+        # the resident state: a device buffer distinct from x0 (the pallas
+        # kernels donate/alias their state input — x0 must survive swaps)
+        self.x = jnp.array(self.x0, copy=True)
         # cumulative per-column accounting across batches; swap_in inverts
         # it for exactly the swapped column (convergence.reinit_columns)
-        self.col_done = np.zeros(self.d, bool)
-        self.col_rounds = np.zeros(self.d, np.int32)
-        # x0/c/fixed only change at swap_in; cache their device copies so
-        # swap-free batches don't re-pay the (npad, d) H2D transfers
-        self._dev_operands = None
-
-    def _operands(self):
-        """Device copies of (x0, c, fixed), refreshed only after a swap."""
-        if self._dev_operands is None:
-            self._dev_operands = tuple(
-                jnp.asarray(a) for a in (self.x0, self.c, self.fixed)
-            )
-        return self._dev_operands
+        self.col_done = jnp.zeros(self.d, bool)
+        self.col_rounds = jnp.zeros(self.d, jnp.int32)
 
     @property
-    def state(self) -> np.ndarray:
-        """The resident (n, d) state, padding rows stripped."""
+    def state(self):
+        """The resident (n, d) state, padding rows stripped.
+
+        A device jax array — the serving layer transfers it to host only at
+        ticket resolution (`GraphServer._resolve`), never between batches.
+        """
         return self.x[: self.n]
+
+    def load_state_column(self, j: int, col) -> None:
+        """Overwrite state column ``j`` rows ``< n`` (delta-rebuild carry).
+
+        The serving layer rebuilds a family on a mutated graph and carries
+        each in-flight query's warm state into the fresh session; padding
+        rows keep their pinned fills. Functional device update — rare path
+        (once per family per delta), so no jit wrapper.
+        """
+        col = jnp.asarray(col, jnp.float32).reshape(-1)
+        self.x = self.x.at[: self.n, j].set(col)
+
+    def set_col_rounds(self, j: int, rounds: int) -> None:
+        """Seed column ``j``'s cumulative round count (delta-rebuild carry)."""
+        self.col_rounds = self.col_rounds.at[j].set(int(rounds))
 
     def swap_in(self, j: int, q_x0, q_c, q_fixed) -> None:
         """Install a new query into column ``j`` (between batches)."""
@@ -353,12 +391,12 @@ class AsyncBlockSession:
         )
         q_x0, q_c = np.asarray(q_x0), np.asarray(q_c)
         q_fixed = np.asarray(q_fixed).astype(bool)
-        harness.swap_in_column(
+        self.x, self.x0, self.c, self.fixed = harness.swap_in_column_device(
             self.x, self.x0, self.c, self.fixed, j, self.n, q_x0, q_c,
-            # kernel operands carry fixed as f32 (1.0 = pinned)
-            q_fixed.astype(np.float32) if self.backend == "pallas" else q_fixed,
+            q_fixed,  # cast to the operands' dtype (f32 pinned=1.0 on pallas)
+            x0_fill=self.algo.semiring.identity,
+            c_fill=self.algo.c_pad_fill,
         )
-        self._dev_operands = None
         if self.backend == "pallas" and self.sweeps_per_call > 1:
             from repro.kernels.gs_sweep import or_dirty_blocks
 
@@ -390,21 +428,24 @@ class AsyncBlockSession:
                 f"max_iters={max_iters} must be a multiple of "
                 f"sweeps_per_call={self.sweeps_per_call}"
             )
-        x0_d, c_d, fx_d = self._operands()
         if self.backend == "jax":
             out = _run(
-                *self._edges, jnp.asarray(self.x), x0_d, c_d, fx_d,
+                *self._edges, self.x, self.x0, self.c, self.fixed,
                 bs=self.bs, nb=self.nb, n_real=self.n,
                 sem_reduce=a.semiring.reduce, sem_edge=a.semiring.edge_op,
                 comb=a.combine, res_kind=a.residual, eps=a.eps,
                 max_iters=max_iters, identity=a.semiring.identity,
                 inner=self.inner, extrapolate_every=0,
             )
+        elif self.backend == "distributed":
+            out = self._dist.run(
+                self.x, self.x0, self.c, self.fixed, max_iters=max_iters,
+            )
         elif self.sweeps_per_call == 1:
             ops = self._ops
             out = _run_pallas(
                 ops["rowptr"], ops["tilecols"], ops["tiles"],
-                c_d, x0_d, fx_d, jnp.asarray(self.x),
+                self.c, self.x0, self.fixed, self.x,
                 semiring=ops["semiring"], combine=ops["combine"], bs=self.bs,
                 n_real=self.n, res_kind=a.residual, eps=a.eps,
                 max_iters=max_iters, interpret=self._interpret,
@@ -414,7 +455,7 @@ class AsyncBlockSession:
             from repro.kernels.gs_sweep import gs_multisweep_pallas
 
             ops = self._ops
-            x0_dev, c_dev, fx_dev = x0_d, c_d, fx_d
+            c_dev, x0_dev, fx_dev = self.c, self.x0, self.fixed
 
             def batch_fn(x, dirty):
                 return gs_multisweep_pallas(
@@ -429,21 +470,25 @@ class AsyncBlockSession:
 
             real_mask = np.arange(self.x.shape[0]) < self.n
             out = harness.sweep_batched_loop(
-                batch_fn, jnp.asarray(self.x), jnp.asarray(self.dirty),
+                batch_fn, self.x, self.dirty,
                 eps=a.eps, max_iters=max_iters, sweeps=self.sweeps_per_call,
                 nb=self.nb, real_mask=real_mask,
             )
-            self.dirty = np.asarray(out[7], np.int32)
-        # writable host copy: swap_in mutates columns between batches
-        self.x = np.array(out[0])
+            self.dirty = out[7]  # device bitmap carried into the next batch
+        # the state never leaves the device: the next batch (and any swap)
+        # consumes this output buffer directly
+        self.x = out[0]
         rep = BatchReport(
             rounds=int(out[1]),
             col_done=np.asarray(out[2]),
             col_rounds=np.asarray(out[3], np.int32),
         )
-        # fold into the cumulative accounting: columns already done before
-        # this batch only re-verified (their 1-round report is not progress)
+        # fold into the cumulative device-side accounting: columns already
+        # done before this batch only re-verified (their 1-round report is
+        # not progress)
         still_active = ~self.col_done
-        self.col_rounds += np.where(still_active, rep.col_rounds, 0)
-        self.col_done |= rep.col_done
+        self.col_rounds = self.col_rounds + jnp.where(
+            still_active, jnp.asarray(rep.col_rounds), 0
+        )
+        self.col_done = self.col_done | jnp.asarray(rep.col_done)
         return rep

@@ -112,12 +112,15 @@ def reinit_columns(col_done, col_rounds, cols) -> tuple[np.ndarray, np.ndarray]:
     Swapping a new query into column j of a resident state matrix
     (`repro.serving`) resets exactly that column's convergence bookkeeping:
     done flag cleared, round count zeroed; every other column keeps its
-    progress. Host-side (numpy) — swaps happen between engine batches.
-    Returns fresh arrays; the inputs are not mutated.
+    progress. Accepts host numpy (returns fresh numpy arrays) or device jax
+    arrays (returns functional `.at[].set` updates, so a device-resident
+    session's accounting never round-trips to host). Inputs are not mutated.
     """
+    cols = np.asarray(cols, dtype=np.int64).reshape(-1)
+    if hasattr(col_done, "at"):  # jax arrays: stay on device
+        return col_done.at[cols].set(False), col_rounds.at[cols].set(0)
     col_done = np.asarray(col_done).copy()
     col_rounds = np.asarray(col_rounds).copy()
-    cols = np.asarray(cols, dtype=np.int64).reshape(-1)
     col_done[cols] = False
     col_rounds[cols] = 0
     return col_done, col_rounds

@@ -3,18 +3,27 @@
 Execution model (DESIGN.md §3): *synchronous across shards, Gauss–Seidel
 within a shard*. Each device owns a contiguous range of blocks of the
 processing order. Per superstep every device sweeps its own blocks
-sequentially against a device-local copy of the full state vector (so its own
+sequentially against a device-local copy of the full state matrix (so its own
 earlier blocks contribute this-round values), then shards are re-assembled —
-one all-gather of the state vector per superstep.
+one all-gather of the state matrix per superstep.
 
 GoGraph's partition-locality objective minimizes cross-shard edges, which is
 exactly what keeps this hybrid close to fully-asynchronous Gauss–Seidel in
 rounds; the paper's single-machine claim transfers because intra-shard edges
 dominate after community-aware reordering.
 
-The per-superstep collective volume is |V|·4 bytes (the gathered state), vs.
-the edge set held shard-local — the same design large-scale systems (Gemini,
-Gluon) use for power-law graphs.
+States are batched ``f32[N, d]`` like every other engine — column j is an
+independent query riding the same supersteps with per-column convergence
+freezing in the shared round driver. The per-superstep collective volume is
+|V|·d·4 bytes (the gathered state matrix), vs. the edge set held
+shard-local — the same design large-scale systems (Gemini, Gluon) use for
+power-law graphs.
+
+:class:`DistContext` packs one algorithm *structure* (edges + block layout +
+mesh) into device operands plus a jitted superstep driver. `run_distributed`
+builds a throwaway context per call; `engine.async_block.AsyncBlockSession`
+(``backend="distributed"``) keeps one alive as the resident backing of a
+serving family whose state spans devices.
 """
 from __future__ import annotations
 
@@ -46,7 +55,7 @@ def make_superstep(
     sem_reduce: str, sem_edge: str, comb: str,
     identity: float, inner: int = 1,
 ):
-    """Build the jittable one-superstep function (also used by the dry-run)."""
+    """Build the jittable one-superstep function over ``(N, d)`` states."""
     ndev = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
     assert nb % ndev == 0
     nb_local = nb // ndev
@@ -54,9 +63,10 @@ def make_superstep(
 
     def superstep(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk):
         # everything below sees the *local* shard of the blocked arrays and a
-        # replicated copy of the state vector
+        # replicated copy of the state matrix
         def inner_fn(x_full, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk):
             dev = jax.lax.axis_index(axis_name)
+            d = x_full.shape[1]
             # the carry becomes device-varying after the first block update;
             # mark the replicated input as varying up-front
             x_full = pvary(x_full, (axis_name,))
@@ -64,11 +74,11 @@ def make_superstep(
             def block_update(j, x_work):
                 gi = dev * nb_local + j  # global block id
                 msgs = J.edge_op(sem_edge, x_work[esrc[j]], ew[j])
-                msgs = jnp.where(emask[j], msgs, identity)
+                msgs = jnp.where(emask[j][:, None], msgs, identity)
                 agg = J.segment_reduce(sem_reduce, msgs, edst[j], bs, identity)
-                old = jax.lax.dynamic_slice(x_work, (gi * bs,), (bs,))
+                old = jax.lax.dynamic_slice(x_work, (gi * bs, 0), (bs, d))
                 new = J.combine(comb, agg, c_blk[j], old, fixed_blk[j], x0_blk[j])
-                return jax.lax.dynamic_update_slice(x_work, new, (gi * bs,))
+                return jax.lax.dynamic_update_slice(x_work, new, (gi * bs, 0))
 
             def block_body(j, x_work):
                 def one(_, xx):
@@ -78,7 +88,7 @@ def make_superstep(
             x_work = jax.lax.fori_loop(0, nb_local, block_body, x_full)
             # each device contributes its own refreshed slice
             dev0 = dev * nb_local * bs
-            return jax.lax.dynamic_slice(x_work, (dev0,), (nb_local * bs,))
+            return jax.lax.dynamic_slice(x_work, (dev0, 0), (nb_local * bs, d))
 
         return shard_map(
             inner_fn,
@@ -92,6 +102,97 @@ def make_superstep(
     return superstep, nb_local
 
 
+class DistContext:
+    """Packed shard_map operands + jitted round driver for one structure.
+
+    Owns what is constant across runs of one algorithm family: the mesh, the
+    device-resident blocked edge arrays (padded to a whole number of blocks
+    per device), the padded ``(npad2, d)`` host operand templates, and the
+    compiled driver. :meth:`run` then converges any ``(npad2, d)`` state
+    against any (same-shape) operand columns — which is exactly what lets a
+    serving session mutate operand columns on device between batches and
+    keep calling the same compiled superstep loop.
+    """
+
+    def __init__(self, algo: AlgoInstance, bs: int, mesh=None,
+                 axis: str = "data", inner: int = 1):
+        if mesh is None:
+            mesh = make_mesh((len(jax.devices()),), (axis,))
+        self.mesh, self.axis, self.bs = mesh, axis, bs
+        ndev = mesh.shape[axis]
+        be, x0, c, fixed, npad = harness.pack(algo, bs)
+        self.nb = ((be.nb + ndev - 1) // ndev) * ndev
+        self.npad2 = self.nb * bs
+        self._edges = tuple(jnp.asarray(a) for a in (
+            _pad_blocks(be.esrc, self.nb, 0),
+            _pad_blocks(be.edst, self.nb, 0),
+            _pad_blocks(be.ew, self.nb, 0.0),
+            _pad_blocks(be.emask, self.nb, False),
+        ))
+
+        def padm(a, fill):
+            out = np.full((self.npad2,) + a.shape[1:], fill, dtype=a.dtype)
+            out[: a.shape[0]] = a
+            return out
+
+        # host templates; callers device-transfer (sessions keep them there)
+        self.x0 = padm(x0, np.asarray(algo.semiring.identity, x0.dtype))
+        self.c = padm(c, np.asarray(algo.c_pad_fill, c.dtype))
+        self.fixed = padm(fixed, True)
+        real_mask = np.zeros(self.npad2, bool)
+        real_mask[: algo.n] = True
+        self._real_mask = jnp.asarray(real_mask)
+
+        superstep, _ = make_superstep(
+            mesh, axis, self.nb, bs,
+            algo.semiring.reduce, algo.semiring.edge_op, algo.combine,
+            algo.semiring.identity, inner=inner,
+        )
+        nb, res_kind, eps = self.nb, algo.residual, algo.eps
+
+        @partial(jax.jit, static_argnames=("max_iters", "extrapolate_every"))
+        def _run(x_start, esrc, edst, ew, emask, x0v, cv, fxv, real_mask,
+                 max_iters: int, extrapolate_every: int):
+            d = x_start.shape[1]
+            c_blk = cv.reshape(nb, bs, d)
+            fixed_blk = fxv.reshape(nb, bs, d)
+            x0_blk = x0v.reshape(nb, bs, d)  # pins stay x0 when warm-started
+
+            def round_fn(x):
+                return superstep(x, esrc, edst, ew, emask, c_blk,
+                                 fixed_blk, x0_blk)
+
+            return harness.loop(
+                round_fn, x_start, res_kind=res_kind, eps=eps,
+                max_iters=max_iters, real_mask=real_mask,
+                extrapolate_every=extrapolate_every,
+            )
+
+        self._run = _run
+
+    def run(self, x_start, x0, c, fixed, *, max_iters: int,
+            extrapolate_every: int = 0):
+        """Drive supersteps to convergence; the `harness.loop` tuple."""
+        with set_mesh(self.mesh):
+            return self._run(
+                jnp.asarray(x_start), *self._edges, jnp.asarray(x0),
+                jnp.asarray(c), jnp.asarray(fixed), self._real_mask,
+                max_iters=max_iters, extrapolate_every=extrapolate_every,
+            )
+
+
+def _solve(algo: AlgoInstance, o) -> RunResult:
+    """Engine body behind ``solve(algo, engine="distributed", ...)``; options
+    are already validated (`engine.api.validate_options`)."""
+    ctx = DistContext(algo, o.bs, mesh=o.mesh, axis=o.axis, inner=o.inner)
+    x_start = harness.init_state(ctx.x0, o.x_init, algo.n)
+    out = ctx.run(
+        x_start, ctx.x0, ctx.c, ctx.fixed,
+        max_iters=o.max_iters, extrapolate_every=o.extrapolate_every,
+    )
+    return harness.finalize(algo, *out)
+
+
 def run_distributed(
     algo: AlgoInstance,
     mesh=None,
@@ -102,75 +203,15 @@ def run_distributed(
     x_init: np.ndarray | None = None,
     extrapolate_every: int = 0,
 ) -> RunResult:
-    """``x_init`` warm-starts from a prior state (incremental serving);
+    """Thin shim over ``solve(algo, engine="distributed")`` — the legacy
+    keyword spelling, parity-tested against `engine.api.solve`.
+
+    ``x_init`` warm-starts from a prior state (incremental serving);
     ``extrapolate_every`` enables Aitken acceleration for linear systems
     (see `harness.loop`)."""
-    harness.check_extrapolation(algo, extrapolate_every)
-    if mesh is None:
-        mesh = make_mesh((len(jax.devices()),), (axis,))
-    ndev = mesh.shape[axis]
+    from repro.engine.api import EngineOptions, solve
 
-    if algo.d != 1:
-        raise NotImplementedError(
-            "run_distributed is single-query for now; use run_sync/"
-            "run_async_block for batched (d > 1) states"
-        )
-    be, x0, c, fixed, npad = harness.pack(algo, bs)
-    x0, c, fixed = x0[:, 0], c[:, 0], fixed[:, 0]
-    nb = ((be.nb + ndev - 1) // ndev) * ndev
-    esrc = _pad_blocks(be.esrc, nb, 0)
-    edst = _pad_blocks(be.edst, nb, 0)
-    ew = _pad_blocks(be.ew, nb, 0.0)
-    emask = _pad_blocks(be.emask, nb, False)
-    npad2 = nb * bs
-
-    def padv(a, fill):
-        out = np.full((npad2,), fill, dtype=a.dtype)
-        out[: len(a)] = a
-        return out
-
-    x0 = padv(x0, algo.semiring.identity)
-    c = padv(c, algo.c_pad_fill)
-    fx = np.ones(npad2, bool)
-    fx[: npad] = fixed
-    c_blk = c.reshape(nb, bs)
-    fixed_blk = fx.reshape(nb, bs)
-    x0_blk = x0.reshape(nb, bs)  # pin source stays x0 even when warm-started
-    x_start = harness.init_state(x0[:, None], x_init, algo.n)[:, 0]
-
-    superstep, _ = make_superstep(
-        mesh, axis, nb, bs,
-        algo.semiring.reduce, algo.semiring.edge_op, algo.combine,
-        algo.semiring.identity, inner=inner,
-    )
-
-    real_mask = np.zeros(npad2, bool)
-    real_mask[: algo.n] = True
-    res_kind = algo.residual
-    eps = algo.eps
-
-    @partial(jax.jit, static_argnames=("max_iters", "extrapolate_every"))
-    def _run(x0v, esrc, edst, ew, emask, c_blk, fixed_blk, x0_blk, real_mask,
-             max_iters: int, extrapolate_every: int):
-        # the shard_map superstep is written over 1-D state vectors; lift it
-        # to the (N, 1) batched contract of the shared round driver
-        def round_fn(x2d):
-            x_new = superstep(x2d[:, 0], esrc, edst, ew, emask, c_blk,
-                              fixed_blk, x0_blk)
-            return x_new[:, None]
-
-        return harness.loop(
-            round_fn, x0v[:, None], res_kind=res_kind, eps=eps,
-            max_iters=max_iters, real_mask=real_mask,
-            extrapolate_every=extrapolate_every,
-        )
-
-    with set_mesh(mesh):
-        out = _run(
-            jnp.asarray(x_start), jnp.asarray(esrc), jnp.asarray(edst),
-            jnp.asarray(ew), jnp.asarray(emask), jnp.asarray(c_blk),
-            jnp.asarray(fixed_blk), jnp.asarray(x0_blk),
-            jnp.asarray(real_mask), max_iters=max_iters,
-            extrapolate_every=extrapolate_every,
-        )
-    return harness.finalize(algo, *out)
+    return solve(algo, engine="distributed", options=EngineOptions(
+        x_init=x_init, extrapolate_every=extrapolate_every, bs=bs,
+        inner=inner, max_iters=max_iters, mesh=mesh, axis=axis,
+    ))

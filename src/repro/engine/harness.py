@@ -123,6 +123,42 @@ def swap_in_column(
     x[:, j] = x0[:, j]
 
 
+@jax.jit
+def _set_query_columns(x, x0, c, fixed, j, q_x0, q_c, q_fixed):
+    # j is traced (an int32 operand, not a static arg): one compiled scatter
+    # serves every slot, so serving swaps never recompile per column
+    return (
+        x.at[:, j].set(q_x0),
+        x0.at[:, j].set(q_x0),
+        c.at[:, j].set(q_c),
+        fixed.at[:, j].set(q_fixed),
+    )
+
+
+def swap_in_column_device(
+    x, x0, c, fixed, j: int, n: int,
+    q_x0: np.ndarray, q_c: np.ndarray, q_fixed: np.ndarray,
+    *, x0_fill: float, c_fill: float,
+):
+    """:func:`swap_in_column` for device-resident ``(npad, d)`` operands.
+
+    Pads the newcomer's length-``n`` vectors with the family's per-column
+    constant fills (the same fills :func:`pack` used, so padding rows stay
+    pinned at the reduce identity) and writes all four columns in one jitted
+    functional update. Returns new ``(x, x0, c, fixed)`` jax arrays — the
+    matrices never round-trip to host; only the newcomer's three length-n
+    vectors transfer H2D.
+    """
+    npad = x.shape[0]
+    xq = np.full(npad, x0_fill, np.float32)
+    xq[:n] = np.asarray(q_x0, np.float32).reshape(-1)
+    cq = np.full(npad, c_fill, np.float32)
+    cq[:n] = np.asarray(q_c, np.float32).reshape(-1)
+    fq = np.ones(npad, fixed.dtype)  # pads pinned (bool on jax, f32 on pallas)
+    fq[:n] = np.asarray(q_fixed).reshape(-1).astype(fq.dtype)
+    return _set_query_columns(x, x0, c, fixed, jnp.int32(j), xq, cq, fq)
+
+
 # The value an *untouched* vertex holds at the start of every workload the
 # constructors build: 0 for the additive semiring, the +BIG sentinel for
 # min-reduce (unreached SSSP/BFS/CC), 0 for max-reduce (SSWP width /

@@ -44,16 +44,7 @@ import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
-from repro.engine.async_block import run_async_block
-from repro.engine.distributed import run_distributed
-from repro.engine.sync import run_sync
 from repro.graphs.graph import Graph
-
-_ENGINES = {
-    "sync": run_sync,
-    "async_block": run_async_block,
-    "distributed": run_distributed,
-}
 
 # Aitken period for the linear delta systems: frequent enough to matter on
 # short warm runs, spaced enough that modes re-mix between jumps.
@@ -182,13 +173,12 @@ def affected_region(algo: AlgoInstance, seeds: np.ndarray) -> np.ndarray:
 
 def _dispatch(engine: str, algo: AlgoInstance, *, x_init=None,
               extrapolate_every: int = 0, **kw) -> RunResult:
-    try:
-        fn = _ENGINES[engine]
-    except KeyError:
-        raise ValueError(
-            f"unknown engine {engine!r}; one of {sorted(_ENGINES)}"
-        ) from None
-    return fn(algo, x_init=x_init, extrapolate_every=extrapolate_every, **kw)
+    # the engine string table IS solve()'s dispatch now: one validation
+    # pass, one set of error messages, for direct and incremental runs alike
+    from repro.engine.api import solve
+
+    return solve(algo, engine=engine, x_init=x_init,
+                 extrapolate_every=extrapolate_every, **kw)
 
 
 def run_incremental(

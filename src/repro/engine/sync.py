@@ -45,13 +45,11 @@ def _run(
     )
 
 
-def run_sync(
-    algo: AlgoInstance, max_iters: int = 2000,
-    x_init: np.ndarray | None = None, extrapolate_every: int = 0,
-) -> RunResult:
-    harness.check_extrapolation(algo, extrapolate_every)
+def _solve(algo: AlgoInstance, o) -> RunResult:
+    """Engine body behind ``solve(algo, engine="sync", ...)``; options are
+    already validated (`engine.api.validate_options`)."""
     arrs = J.device_arrays(algo)
-    x_start = harness.init_state(np.asarray(algo.x0), x_init, algo.n)
+    x_start = harness.init_state(np.asarray(algo.x0), o.x_init, algo.n)
     out = _run(
         arrs["src"], arrs["dst"], arrs["w"],
         jax.numpy.asarray(x_start), arrs["x0"], arrs["c"], arrs["fixed"],
@@ -61,8 +59,22 @@ def run_sync(
         comb=algo.combine,
         res_kind=algo.residual,
         eps=algo.eps,
-        max_iters=max_iters,
+        max_iters=o.max_iters,
         identity=algo.semiring.identity,
-        extrapolate_every=extrapolate_every,
+        extrapolate_every=o.extrapolate_every,
     )
     return harness.finalize(algo, *out)
+
+
+def run_sync(
+    algo: AlgoInstance, max_iters: int = 2000,
+    x_init: np.ndarray | None = None, extrapolate_every: int = 0,
+) -> RunResult:
+    """Thin shim over ``solve(algo, engine="sync")`` — kept for the legacy
+    keyword spelling; parity-tested bitwise against `engine.api.solve`."""
+    from repro.engine.api import EngineOptions, solve
+
+    return solve(algo, engine="sync", options=EngineOptions(
+        max_iters=max_iters, x_init=x_init,
+        extrapolate_every=extrapolate_every,
+    ))

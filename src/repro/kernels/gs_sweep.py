@@ -98,10 +98,17 @@ def or_dirty_blocks(dirty, vertex_mask, n: int, bs: int) -> np.ndarray:
     unsupported vertex of the fresh column whose in-neighbors are all
     unsupported holds its inert fill, whose update is a bitwise no-op until
     an in-neighbor moves (and the kernel re-marks dependents when one does).
+
+    ``dirty`` may be host numpy or a device jax array; a jax bitmap is OR-ed
+    functionally and stays on device (the serving session carries it across
+    batches without host sync — the vertex mask itself is tiny, host-built
+    from the newcomer query's own host-side vectors).
     """
     from repro.graphs.blocked import frontier_blocks
 
     add = frontier_blocks(np.asarray(vertex_mask), n, bs)
+    if hasattr(dirty, "at"):  # jax array: stays device-resident
+        return jnp.maximum(dirty, jnp.asarray(add)).astype(jnp.int32)
     return np.maximum(np.asarray(dirty, np.int32), add).astype(np.int32)
 
 # semiring/combine pairs the kernel body implements, with the accumulator

@@ -1,3 +1,4 @@
+from repro.graphs.delta import GraphDelta
 from repro.serving.cache import CacheEntry, ResultCache
 from repro.serving.scheduler import POLICIES, Scheduler, family_key
 from repro.serving.server import GraphServer, Ticket
@@ -6,6 +7,7 @@ from repro.serving.stats import ServerStats, percentile
 __all__ = [
     "GraphServer",
     "Ticket",
+    "GraphDelta",
     "ResultCache",
     "CacheEntry",
     "Scheduler",

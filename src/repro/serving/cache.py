@@ -1,12 +1,12 @@
-"""Graph-version result cache with delta-region invalidation.
+"""Byte-budgeted LRU result cache with graph-version region invalidation.
 
-Entries are keyed by ``(algo, canonical params)`` and carry the
+Entries are keyed by ``(tenant, algo, canonical params)`` and carry the
 ``graph_version`` they were computed at; a lookup hits only when the entry's
-version matches the server's current one. The point of the design is what
-happens when a :class:`~repro.graphs.delta.GraphDelta` lands: instead of
-flushing everything, :meth:`ResultCache.apply_delta` *promotes* to the new
-version every entry whose cached **support blocks** miss the delta-touched
-blocks, and drops the rest.
+version matches the owning tenant's current one. The point of the design is
+what happens when a :class:`~repro.graphs.delta.GraphDelta` lands: instead
+of flushing everything, :meth:`ResultCache.apply_delta` *promotes* to the
+new version every entry whose cached **support blocks** miss the
+delta-touched blocks, and drops the rest.
 
 Why that rule is sound (and not just a heuristic): an entry's support is the
 block set where its answer or its inputs deviate from the workload's inert
@@ -25,10 +25,22 @@ invalidated by any edge delta — the correct, conservative outcome.
 
 Block granularity matches the serving engine's ``bs``: coarser than vertex
 granularity, so strictly more conservative, never less sound.
+
+Two bounds keep a long-running multi-tenant server honest:
+
+* ``max_bytes`` — a byte budget over the cached ``(n,)`` states. The cache
+  is an LRU (ordered dict, recency = get/put): inserting past the budget
+  evicts least-recently-used entries until it fits; an entry larger than
+  the whole budget is simply not retained.
+* Per-tenant invalidation — :meth:`apply_delta` takes a ``select``
+  predicate over keys, so one tenant's graph delta can never touch another
+  tenant's entries (their versions advance independently).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -43,15 +55,35 @@ class CacheEntry:
     hits: int = 0
 
 
-class ResultCache:
-    """(algo, params, graph_version)-keyed results, region-invalidated."""
+# accounting overhead charged per entry on top of the state bytes (key
+# tuple, support set, dataclass) — keeps a budget of tiny states from
+# admitting an unbounded entry count
+_ENTRY_OVERHEAD = 256
 
-    def __init__(self):
-        self._entries: dict[tuple, CacheEntry] = {}
+
+def _entry_bytes(e: CacheEntry) -> int:
+    return int(e.x.nbytes) + _ENTRY_OVERHEAD
+
+
+class ResultCache:
+    """(tenant, algo, params)-keyed LRU results, region-invalidated.
+
+    ``max_bytes`` bounds the resident bytes (None = unbounded, the pre-LRU
+    behavior). Recency order: :meth:`get` hits and :meth:`put` inserts both
+    refresh an entry; eviction pops the least recently used.
+    """
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        if max_bytes is not None and max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.bytes = 0
         self.hits = 0
         self.misses = 0
         self.invalidated = 0
         self.promoted = 0
+        self.evicted = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -62,6 +94,7 @@ class ResultCache:
         if e is None or e.graph_version != graph_version:
             self.misses += 1
             return None
+        self._entries.move_to_end(key)  # LRU refresh
         self.hits += 1
         e.hits += 1
         return e
@@ -70,42 +103,67 @@ class ResultCache:
         self, key: tuple, x: np.ndarray, rounds: int,
         support_blocks, graph_version: int, x0_fill: float,
     ) -> None:
-        self._entries[key] = CacheEntry(
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= _entry_bytes(old)
+        e = CacheEntry(
             x=np.asarray(x).copy(), rounds=int(rounds),
             support_blocks=frozenset(int(b) for b in support_blocks),
             graph_version=graph_version, x0_fill=float(x0_fill),
         )
+        self._entries[key] = e
+        self.bytes += _entry_bytes(e)
+        self._evict_to_budget()
+
+    def _evict_to_budget(self) -> None:
+        if self.max_bytes is None:
+            return
+        while self.bytes > self.max_bytes and self._entries:
+            _, old = self._entries.popitem(last=False)  # least recently used
+            self.bytes -= _entry_bytes(old)
+            self.evicted += 1
 
     def apply_delta(
         self, touched_blocks, new_version: int, n_new: int | None = None,
+        select: Optional[Callable[[tuple], bool]] = None,
     ) -> None:
         """Promote entries untouched by the delta; drop the rest.
 
         ``touched_blocks`` — block ids containing any endpoint of a
         mutated (added/deleted/reweighted) edge. ``n_new`` extends promoted
         states with their inert fill when the delta appended vertices.
+        ``select`` scopes the pass to one tenant's keys — unselected
+        entries are left untouched (their tenant's version didn't move).
         """
         touched = frozenset(int(b) for b in touched_blocks)
-        keep: dict[tuple, CacheEntry] = {}
-        for key, e in self._entries.items():
+        for key in list(self._entries):
+            if select is not None and not select(key):
+                continue
+            e = self._entries[key]
             if e.graph_version != new_version - 1 or (e.support_blocks & touched):
+                del self._entries[key]
+                self.bytes -= _entry_bytes(e)
                 self.invalidated += 1
                 continue
             e.graph_version = new_version
             if n_new is not None and n_new > len(e.x):
+                self.bytes -= _entry_bytes(e)
                 e.x = np.concatenate([
                     e.x,
                     np.full(n_new - len(e.x), e.x0_fill, e.x.dtype),
                 ])
-            keep[key] = e
+                self.bytes += _entry_bytes(e)
             self.promoted += 1
-        self._entries = keep
+        self._evict_to_budget()  # promotion growth can overshoot the budget
 
     def stats(self) -> dict:
         return {
             "entries": len(self._entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
             "hits": self.hits,
             "misses": self.misses,
             "invalidated": self.invalidated,
             "promoted": self.promoted,
+            "evicted": self.evicted,
         }

@@ -9,7 +9,7 @@ slowest one drains. :class:`GraphServer` is the graph analogue of an LLM
 server's continuous batching:
 
 * :meth:`submit` files a :class:`Ticket`. Queries of the same *family*
-  (same algorithm structure — edges, semiring, combine, eps; see
+  (same tenant + algorithm structure — edges, semiring, combine, eps; see
   `scheduler.family_key`) share one resident state matrix whose columns are
   slots.
 * The event loop (:meth:`step`) packs queued tickets into free columns,
@@ -17,21 +17,35 @@ server's continuous batching:
   AsyncBlockSession` — the shared harness with per-column freezing), and on
   per-column convergence **swaps the finished column out and a queued query
   in**: the newcomer's ``x0``/``c``/``fixed`` overwrite the column
-  (`harness.swap_in_column`), its convergence bookkeeping resets
-  (`convergence.reinit_columns` semantics), and under the pallas megakernel
-  its support blocks are OR-ed into the dirty frontier
-  (`kernels.gs_sweep.or_dirty_blocks`) so only what the newcomer needs is
-  re-touched.
-* Results land in a graph-version cache (`serving.cache`) keyed by
-  ``(algo, params, graph_version)``; a later identical submit is served
+  (`harness.swap_in_column_device` — a jitted functional update, the
+  matrices never leave the device), its convergence bookkeeping resets
+  (`convergence.reinit_columns` on the device-side accounting), and under
+  the pallas megakernel its support blocks are OR-ed into the dirty
+  frontier (`kernels.gs_sweep.or_dirty_blocks`) so only what the newcomer
+  needs is re-touched.
+* The server is **multi-tenant**: it hosts several independent graphs side
+  by side (:meth:`add_tenant`), each with its own graph version, families,
+  and deltas. :meth:`step` interleaves family batches round-robin *across
+  tenants* with a rotating start, so one hot tenant cannot starve another's
+  resident slots; `ServerStats.tenant_batches` exposes the share each
+  tenant actually received.
+* Results land in a byte-budgeted LRU graph-version cache (`serving.cache`)
+  keyed by ``(tenant, algo, params)``; a later identical submit is served
   without running anything.
 * :meth:`apply_delta` ingests a live :class:`~repro.graphs.delta.
-  GraphDelta` between batches: the graph version bumps, cache entries whose
-  support intersects the delta-touched blocks are invalidated (the rest are
-  promoted), and in-flight queries either continue warm
+  GraphDelta` between batches for one tenant: its graph version bumps, its
+  cache entries whose support intersects the delta-touched blocks are
+  invalidated (the rest promoted; other tenants' entries are never
+  touched), and its in-flight queries either continue warm
   (``delta_mode="warm"``, reusing `engine.incremental`'s warm-state /
-  affected-region machinery) or restart on the new graph
-  (``delta_mode="restart"``, keeping per-query round counts solo-exact).
+  affected-region machinery with the carry staying on device) or restart
+  on the new graph (``delta_mode="restart"``, keeping per-query round
+  counts solo-exact).
+
+The sessions are device-resident end to end: state, operands, frontier
+bitmaps, and per-column accounting live as jax arrays across batches,
+swaps, and delta rebuilds. The only (n,)-sized host transfer happens in
+:meth:`_resolve`, when a finished column becomes a ticket's result.
 
 Correctness contract (mirrors PR 4, enforced by ``tests/test_serving.py``):
 a query's resolved state and round count equal a solo ``run_async_block``
@@ -46,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import harness
@@ -54,13 +69,14 @@ from repro.engine.async_block import AsyncBlockSession
 from repro.engine.incremental import (
     affected_region,
     instance_edge_diff,
-    warm_state,
 )
 from repro.graphs.delta import GraphDelta
 from repro.graphs.graph import Graph
 from repro.serving.cache import ResultCache
 from repro.serving.scheduler import Scheduler, canon, family_key
 from repro.serving.stats import ServerStats
+
+DEFAULT_TENANT = "default"
 
 
 @dataclasses.dataclass
@@ -72,9 +88,10 @@ class Ticket:
     params: dict
     priority: int
     deadline: Optional[float]     # seconds after submit (EDF policy input)
-    family: tuple
+    family: tuple                 # (tenant,) + scheduler.family_key(...)
     submitted_at: float
     graph_version: int            # version submitted at; updated on resolve
+    tenant: str = DEFAULT_TENANT
     status: str = "queued"        # queued | running | done | cached | failed
     started_at: Optional[float] = None
     resolved_at: Optional[float] = None
@@ -90,10 +107,20 @@ class Ticket:
 
 
 @dataclasses.dataclass
+class _Tenant:
+    """One independently served (and independently evolving) graph."""
+
+    name: str
+    g: Graph
+    graph_version: int = 0
+
+
+@dataclasses.dataclass
 class _Family:
     """One resident state matrix + its slot bookkeeping."""
 
     key: tuple
+    tenant: str
     probe: AlgoInstance                 # d = 1 structural reference
     session: AsyncBlockSession
     tickets: list                       # Optional[Ticket] per slot
@@ -110,20 +137,28 @@ class _Family:
 
 
 class GraphServer:
-    """Continuous-batching query server over one (evolving) graph.
+    """Continuous-batching query server over one or more (evolving) graphs.
 
     Parameters
     ----------
-    graph : the served graph (mutated only through :meth:`apply_delta`).
+    graph : the default tenant's graph (mutated only through
+        :meth:`apply_delta`). Add further tenants with :meth:`add_tenant`
+        or pass ``graphs`` directly.
+    graphs : optional ``{tenant_name: Graph}`` mapping served alongside
+        (or instead of) ``graph``.
     slots : columns per family's resident state matrix (the ``d`` of the
         f32[n, d] batches).
     rounds_per_batch : engine rounds between swap opportunities. Smaller =
         tighter refill latency, more host round-trips; must be a multiple
         of ``sweeps_per_call``.
     backend / inner / sweeps_per_call / bs : forwarded to
-        `engine.async_block.AsyncBlockSession`.
+        `engine.async_block.AsyncBlockSession` (``backend="distributed"``
+        backs each family with the shard_map superstep so a large tenant's
+        resident state spans devices).
     policy : admission order — "fifo" | "priority" | "deadline".
     cache : enable the graph-version result cache.
+    cache_max_bytes : byte budget for the cache (LRU eviction); None =
+        unbounded.
     refill : "continuous" (swap per converged column — the point of this
         module) or "static" (refill only when every slot resolved; the
         benchmark baseline).
@@ -135,9 +170,11 @@ class GraphServer:
     """
 
     def __init__(
-        self, graph: Graph, *, slots: int = 8, bs: int = 64,
+        self, graph: Optional[Graph] = None, *,
+        graphs: Optional[dict] = None, slots: int = 8, bs: int = 64,
         rounds_per_batch: int = 8, inner: int = 1, backend: str = "jax",
         sweeps_per_call: int = 1, policy: str = "fifo", cache: bool = True,
+        cache_max_bytes: Optional[int] = None,
         refill: str = "continuous", delta_mode: str = "warm",
         max_rounds_per_query: int = 2000,
     ):
@@ -159,7 +196,15 @@ class GraphServer:
                 "rounds_per_batch must be a multiple of sweeps_per_call "
                 "(the megakernel advances whole batches of sweeps)"
             )
-        self.g = graph
+        self.tenants: dict[str, _Tenant] = {}
+        if graph is not None:
+            self.tenants[DEFAULT_TENANT] = _Tenant(DEFAULT_TENANT, graph)
+        for name, g in (graphs or {}).items():
+            if name in self.tenants:
+                raise ValueError(f"duplicate tenant {name!r}")
+            self.tenants[name] = _Tenant(name, g)
+        if not self.tenants:
+            raise ValueError("GraphServer needs at least one graph to serve")
         self.slots = slots
         self.bs = bs
         self.rounds_per_batch = rounds_per_batch
@@ -169,9 +214,8 @@ class GraphServer:
         self.refill = refill
         self.delta_mode = delta_mode
         self.max_rounds_per_query = max_rounds_per_query
-        self.graph_version = 0
         self.scheduler = Scheduler(policy)
-        self.cache = ResultCache() if cache else None
+        self.cache = ResultCache(max_bytes=cache_max_bytes) if cache else None
         self.stats = ServerStats(slots=slots)
         # LIVE (queued/running) tickets only: terminal transitions drop the
         # entry so a long-running server doesn't retain every (n,) result
@@ -180,32 +224,56 @@ class GraphServer:
         self.tickets: dict[int, Ticket] = {}
         self._families: dict[tuple, _Family] = {}
         self._next_id = 0
+        self._rr = 0   # rotating tenant offset for cross-tenant fairness
+
+    # ---------------------------------------------------------- back-compat
+    # single-tenant spelling: srv.g / srv.graph_version read the default
+    # tenant, exactly the pre-multi-tenant surface
+
+    @property
+    def g(self) -> Graph:
+        return self.tenants[DEFAULT_TENANT].g
+
+    @property
+    def graph_version(self) -> int:
+        return self.tenants[DEFAULT_TENANT].graph_version
 
     # ------------------------------------------------------------------ API
 
+    def add_tenant(self, name: str, graph: Graph) -> None:
+        """Serve another independent graph under ``name``."""
+        if name in self.tenants:
+            raise ValueError(f"duplicate tenant {name!r}")
+        self.tenants[name] = _Tenant(name, graph)
+
     def submit(
         self, algo: str, params: Optional[dict] = None, *,
+        tenant: str = DEFAULT_TENANT,
         priority: int = 0, deadline: Optional[float] = None,
     ) -> Ticket:
-        """File a query; returns its :class:`Ticket` (possibly already
-        resolved from the cache). One query per ticket — batched
-        constructors (``ppr`` with one seed, ``sssp`` with one source) are
-        submitted per column."""
+        """File a query against ``tenant``'s graph; returns its
+        :class:`Ticket` (possibly already resolved from the cache). One
+        query per ticket — batched constructors (``ppr`` with one seed,
+        ``sssp`` with one source) are submitted per column."""
         if algo not in ALGORITHMS:
             raise KeyError(
                 f"unknown algorithm {algo!r}; one of {sorted(ALGORITHMS)}"
             )
+        ten = self._tenant(tenant)
         params = dict(params or {})
         t = Ticket(
             id=self._next_id, algo=algo, params=params, priority=priority,
-            deadline=deadline, family=family_key(algo, params),
-            submitted_at=self.stats.now(), graph_version=self.graph_version,
+            deadline=deadline, family=(tenant,) + family_key(algo, params),
+            submitted_at=self.stats.now(), graph_version=ten.graph_version,
+            tenant=tenant,
         )
         self._next_id += 1
         self.tickets[t.id] = t
         self.stats.record_submit()
         if self.cache is not None:
-            entry = self.cache.get((algo, canon(params)), self.graph_version)
+            entry = self.cache.get(
+                (tenant, algo, canon(params)), ten.graph_version
+            )
             if entry is not None:
                 t.status = "cached"
                 t.from_cache = True
@@ -220,32 +288,55 @@ class GraphServer:
 
     def step(self) -> int:
         """One server tick: for every family with work, fill free columns
-        from the queue and run one bounded batch of rounds. Returns the
-        number of family batches executed (0 = fully idle)."""
+        from the queue and run one bounded batch of rounds. Families are
+        interleaved round-robin across tenants with a rotating start, so
+        every tick gives every tenant with work a batch before any tenant
+        gets a second one. Returns the number of family batches executed
+        (0 = fully idle)."""
         keys = list(self._families)
         keys += [k for k in self.scheduler.families() if k not in self._families]
+        by_tenant: dict[str, list[tuple]] = {}
+        for k in keys:
+            by_tenant.setdefault(k[0], []).append(k)
+        names = list(by_tenant)
+        if names:
+            off = self._rr % len(names)
+            names = names[off:] + names[:off]
+            self._rr += 1
         worked = 0
-        for key in keys:
-            fam = self._ensure_family(key)
-            if fam is None:
-                continue
-            self._fill_slots(fam)
-            occupied = fam.occupied()
-            if not occupied:
-                continue
-            rep = fam.session.run_batch(self.rounds_per_batch)
-            self.stats.record_batch(len(occupied), rep.rounds)
-            for j, t in occupied:
-                # the session's cumulative accounting (reset per swap-in,
-                # carried across delta rebuilds) is the single source of
-                # per-query round truth
-                t.rounds = int(fam.session.col_rounds[j])
-                if bool(fam.session.col_done[j]):
-                    self._resolve(fam, j, t, converged=True)
-                elif t.rounds >= self.max_rounds_per_query:
-                    self._resolve(fam, j, t, converged=False)
-            worked += 1
+        # one family per tenant per round of the interleave
+        rotations = max((len(v) for v in by_tenant.values()), default=0)
+        for i in range(rotations):
+            for name in names:
+                fams = by_tenant[name]
+                if i >= len(fams):
+                    continue
+                worked += self._run_family_batch(fams[i])
         return worked
+
+    def _run_family_batch(self, key: tuple) -> int:
+        fam = self._ensure_family(key)
+        if fam is None:
+            return 0
+        self._fill_slots(fam)
+        occupied = fam.occupied()
+        if not occupied:
+            return 0
+        rep = fam.session.run_batch(self.rounds_per_batch)
+        self.stats.record_batch(len(occupied), rep.rounds, tenant=fam.tenant)
+        # one host readout of the (d,)-sized accounting per family batch
+        col_done = np.asarray(fam.session.col_done)
+        col_rounds = np.asarray(fam.session.col_rounds)
+        for j, t in occupied:
+            # the session's cumulative accounting (reset per swap-in,
+            # carried across delta rebuilds) is the single source of
+            # per-query round truth
+            t.rounds = int(col_rounds[j])
+            if bool(col_done[j]):
+                self._resolve(fam, j, t, converged=True)
+            elif t.rounds >= self.max_rounds_per_query:
+                self._resolve(fam, j, t, converged=False)
+        return 1
 
     def run(self, max_steps: Optional[int] = None) -> dict:
         """Drive :meth:`step` until every submitted ticket resolved (or
@@ -259,28 +350,43 @@ class GraphServer:
             steps += 1
         return self.stats.summary()
 
-    def apply_delta(self, delta: GraphDelta) -> None:
-        """Ingest a live graph mutation between batches.
+    def apply_delta(self, delta: GraphDelta,
+                    tenant: str = DEFAULT_TENANT) -> None:
+        """Ingest a live graph mutation for one tenant between batches.
 
-        Bumps the graph version, region-invalidates the cache (entries
-        whose support misses every delta-touched block are *promoted* to
-        the new version instead), rebuilds each family on the mutated
-        graph, and carries in-flight queries per ``delta_mode``. Queued
-        tickets need nothing: queries are instantiated against the current
-        graph at swap-in time, so a query that arrives the same batch a
-        delta lands simply runs on the new graph.
+        Bumps the tenant's graph version, region-invalidates its cache
+        entries (entries whose support misses every delta-touched block are
+        *promoted* to the new version instead; other tenants' entries are
+        never inspected), rebuilds each of the tenant's families on the
+        mutated graph, and carries in-flight queries per ``delta_mode``.
+        Queued tickets need nothing: queries are instantiated against the
+        tenant's current graph at swap-in time, so a query that arrives the
+        same batch a delta lands simply runs on the new graph.
         """
-        g_new = delta.apply(self.g)
-        self.graph_version += 1
+        ten = self._tenant(tenant)
+        g_new = delta.apply(ten.g)
+        ten.graph_version += 1
         if self.cache is not None:
             touched = np.unique(delta.touched_vertices() // self.bs)
-            self.cache.apply_delta(touched, self.graph_version, n_new=g_new.n)
-        self.g = g_new
+            self.cache.apply_delta(
+                touched, ten.graph_version, n_new=g_new.n,
+                select=lambda key: key[0] == tenant,
+            )
+        ten.g = g_new
         self.stats.deltas_applied += 1
         for fam in self._families.values():
-            self._rebuild_family(fam)
+            if fam.tenant == tenant:
+                self._rebuild_family(fam)
 
     # ------------------------------------------------------------ internals
+
+    def _tenant(self, name: str) -> _Tenant:
+        try:
+            return self.tenants[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {name!r}; one of {sorted(self.tenants)}"
+            ) from None
 
     def _busy(self) -> bool:
         return any(f.occupied() for f in self._families.values())
@@ -292,15 +398,16 @@ class GraphServer:
     _VERTEX_PARAMS = ("source", "target", "seeds", "sources")
 
     def _build_query(self, t: Ticket) -> AlgoInstance:
+        g = self._tenant(t.tenant).g
         for name in self._VERTEX_PARAMS:
             if name in t.params:
                 v = np.asarray(t.params[name]).reshape(-1)
-                if len(v) and (v.min() < 0 or v.max() >= self.g.n):
+                if len(v) and (v.min() < 0 or v.max() >= g.n):
                     raise ValueError(
                         f"{name}={t.params[name]} out of range for a graph "
-                        f"with n={self.g.n} vertices"
+                        f"with n={g.n} vertices"
                     )
-        q = get_algorithm(t.algo, self.g, **t.params)
+        q = get_algorithm(t.algo, g, **t.params)
         if q.d != 1:
             raise ValueError(
                 f"one query per ticket: {t.algo} with {t.params} builds "
@@ -315,7 +422,8 @@ class GraphServer:
         self.tickets.pop(t.id, None)
         self.stats.record_fail()
 
-    def _make_family(self, key: tuple, probe: AlgoInstance) -> _Family:
+    def _make_family(self, key: tuple, tenant: str,
+                     probe: AlgoInstance) -> _Family:
         n, d = probe.n, self.slots
         # idle columns are pinned everywhere: they converge on their first
         # verification round and can never influence a real query's column
@@ -331,7 +439,7 @@ class GraphServer:
             sweeps_per_call=self.sweeps_per_call,
         )
         return _Family(
-            key=key, probe=probe, session=session,
+            key=key, tenant=tenant, probe=probe, session=session,
             tickets=[None] * d, queries=[None] * d,
         )
 
@@ -352,7 +460,7 @@ class GraphServer:
             # the probe only donates structure; the ticket stays queued and
             # is admitted through the ordinary _fill_slots path (which
             # reuses this already-built instance)
-            fam = self._make_family(key, q)
+            fam = self._make_family(key, t.tenant, q)
             fam.probe_cache = (t.id, q)
             self._families[key] = fam
             return fam
@@ -405,12 +513,13 @@ class GraphServer:
 
     def _resolve(self, fam: _Family, j: int, t: Ticket, converged: bool) -> None:
         q = fam.queries[j]
-        x = fam.session.state[:, j].copy()
+        # the ONE (n,)-sized device->host transfer of a query's lifecycle
+        x = np.asarray(fam.session.state[:, j])
         t.result = x
         t.converged = converged
         t.status = "done"
         t.resolved_at = self.stats.now()
-        t.graph_version = self.graph_version
+        t.graph_version = self._tenant(t.tenant).graph_version
         self.tickets.pop(t.id, None)
         self.stats.record_resolve(t)
         if self.cache is not None and converged:
@@ -420,8 +529,8 @@ class GraphServer:
             )
             blocks = np.unique(np.nonzero(support)[0] // self.bs)
             self.cache.put(
-                (t.algo, canon(t.params)), x, t.rounds, blocks,
-                self.graph_version,
+                (t.tenant, t.algo, canon(t.params)), x, t.rounds, blocks,
+                t.graph_version,
                 x0_fill=harness.X0_FILL[q.semiring.reduce],
             )
         if not converged:
@@ -438,10 +547,10 @@ class GraphServer:
 
     def _rebuild_family(self, fam: _Family) -> None:
         probe_old = fam.probe
-        probe_new = remake(probe_old, self.g)
+        probe_new = remake(probe_old, self._tenant(fam.tenant).g)
         occupied = [(j, t, fam.queries[j]) for j, t in fam.occupied()]
-        old_state = fam.session.state.copy()   # (n_old, d)
-        new = self._make_family(fam.key, probe_new)
+        old_state = fam.session.state   # device (n_old, d); read per column
+        new = self._make_family(fam.key, fam.tenant, probe_new)
         region = None
         if self.delta_mode == "warm" and probe_new.semiring.reduce != "sum":
             # a loosening delta (deletions / weights moved against the
@@ -454,16 +563,24 @@ class GraphServer:
                 seeds = np.concatenate([diff.removed_dst, diff.loosened_dst])
                 region = affected_region(probe_new, seeds)
         for j, t, q_old in occupied:
-            q_new = remake(q_old, self.g)
+            q_new = remake(q_old, self._tenant(fam.tenant).g)
             self._install(new, j, t, q_new)
             if self.delta_mode == "warm":
-                x_warm = warm_state(q_new, q_old, old_state[:, j])
+                # device-side warm carry (the jnp mirror of `engine.
+                # incremental.warm_state` for one column): surviving
+                # vertices keep their device values, appended vertices
+                # start at x0, pins and the loosened region serve x0
+                base = jnp.asarray(q_new.x0[:, 0])
+                col = jnp.concatenate(
+                    [old_state[: q_old.n, j], base[q_old.n:]]
+                )
+                col = jnp.where(jnp.asarray(q_new.fixed[:, 0]), base, col)
                 if region is not None:
-                    x_warm = np.where(region[:, None], q_new.x0, x_warm)
-                new.session.x[: q_new.n, j] = x_warm[:, 0]
+                    col = jnp.where(jnp.asarray(region), base, col)
+                new.session.load_state_column(j, col)
                 # the new session's accounting starts at 0; carry the
                 # rounds the warm continuation already consumed
-                new.session.col_rounds[j] = t.rounds
+                new.session.set_col_rounds(j, t.rounds)
             else:
                 t.rounds = 0   # restart: solo-exact counts on the new graph
         fam.probe = probe_new

@@ -48,6 +48,10 @@ class ServerStats:
     round_slots_total: int = 0     # rounds x occupied slots (useful work)
     deltas_applied: int = 0
     deadline_misses: int = 0
+    # per-tenant slices of the batch/round counters — what the cross-tenant
+    # fairness gate reads (no tenant's share may starve; see benchmarks)
+    tenant_batches: dict = dataclasses.field(default_factory=dict)
+    tenant_rounds: dict = dataclasses.field(default_factory=dict)
     occupancy_trace: list = dataclasses.field(default_factory=list)
     _latency_s: list = dataclasses.field(default_factory=list)
     _wait_s: list = dataclasses.field(default_factory=list)
@@ -75,10 +79,16 @@ class ServerStats:
         self._append(self._latency_s, 0.0)
         self._append(self._rounds, 0)
 
-    def record_batch(self, occupied: int, rounds: int) -> None:
+    def record_batch(self, occupied: int, rounds: int,
+                     tenant: str | None = None) -> None:
         self.batches += 1
         self.rounds_total += rounds
         self.round_slots_total += rounds * occupied
+        if tenant is not None:
+            self.tenant_batches[tenant] = self.tenant_batches.get(tenant, 0) + 1
+            self.tenant_rounds[tenant] = (
+                self.tenant_rounds.get(tenant, 0) + rounds
+            )
         self._append(self.occupancy_trace, occupied / max(1, self.slots))
 
     def record_fail(self) -> None:
@@ -122,6 +132,8 @@ class ServerStats:
             "round_slots_total": self.round_slots_total,
             "deltas_applied": self.deltas_applied,
             "deadline_misses": self.deadline_misses,
+            "tenant_batches": dict(self.tenant_batches),
+            "tenant_rounds": dict(self.tenant_rounds),
             "elapsed_s": elapsed,
             "throughput_qps": self.resolved / elapsed if elapsed > 0 else 0.0,
             "latency_p50_s": percentile(self._latency_s, 50),

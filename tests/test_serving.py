@@ -439,3 +439,130 @@ def test_swap_in_column_keeps_padding():
     # padding rows keep the reduce-identity fill in every column
     assert (x0[q.n :, :] == fam.semiring.identity).all()
     assert fixed[q.n :, :].all()
+
+
+# ---------------------------------------------------------------------------
+# multi-tenancy: several graphs per server, fair slots, scoped deltas
+# ---------------------------------------------------------------------------
+
+def _second_graph():
+    g = gen.scrambled(gen.powerlaw_cluster(N + 40, 4, p=0.4, seed=11), seed=3)
+    return gen.with_random_weights(g, lo=0.1, hi=1.0, seed=4)
+
+
+GW2 = _second_graph()
+
+
+def test_multi_tenant_results_match_each_tenants_graph():
+    srv = GraphServer(GW, slots=2, bs=BS, rounds_per_batch=4)
+    srv.add_tenant("b", GW2)
+    t_a = srv.submit("sssp", {"source": 0})
+    t_b = srv.submit("sssp", {"source": 0}, tenant="b")
+    srv.run()
+    solo_a = _solo("sssp", 0)
+    solo_b = run_async_block(get_algorithm("sssp", GW2, source=0), bs=BS)
+    _check_ticket(t_a, solo_a)
+    assert t_b.rounds == solo_b.rounds
+    np.testing.assert_array_equal(t_b.result, solo_b.x)
+    assert t_a.result.shape != t_b.result.shape  # really two graphs
+
+
+def test_multi_tenant_fair_round_robin():
+    """Symmetric load on two tenants -> batch counts within one of each
+    other: the rotating interleave gives every tenant with work a batch
+    before any tenant gets a second one."""
+    srv = GraphServer(graphs={"a": GW, "b": GW}, slots=2, bs=BS,
+                      rounds_per_batch=2)
+    for s in (0, 3, 9, 14):
+        srv.submit("ppr", {"seeds": [s]}, tenant="a")
+        srv.submit("ppr", {"seeds": [s]}, tenant="b")
+    srv.run()
+    tb = srv.stats.tenant_batches
+    assert set(tb) == {"a", "b"}
+    assert abs(tb["a"] - tb["b"]) <= 1, tb
+    tr = srv.stats.tenant_rounds
+    assert tr["a"] > 0 and tr["b"] > 0
+    s = srv.stats.summary()
+    assert s["tenant_batches"] == tb and s["tenant_rounds"] == tr
+
+
+def test_multi_tenant_delta_scoped_to_one_tenant():
+    """Tenant a's delta bumps only a's version and can only invalidate a's
+    cache entries; tenant b's cached result keeps serving hits."""
+    srv = GraphServer(graphs={"a": GW, "b": GW2}, slots=2, bs=BS,
+                      rounds_per_batch=4)
+    srv.submit("pagerank", {}, tenant="a")
+    srv.submit("pagerank", {}, tenant="b")
+    srv.run()
+    assert len(srv.cache) == 2
+    delta = random_delta(GW, frac_add=0.01, seed=5)
+    srv.apply_delta(delta, tenant="a")
+    assert srv.tenants["a"].graph_version == 1
+    assert srv.tenants["b"].graph_version == 0
+    # pagerank has global support: a's entry must die, b's must survive
+    t_b = srv.submit("pagerank", {}, tenant="b")
+    assert t_b.from_cache
+    t_a = srv.submit("pagerank", {}, tenant="a")
+    assert not t_a.from_cache
+    srv.run()
+    solo_a = run_async_block(get_algorithm("pagerank", srv.tenants["a"].g),
+                             bs=BS)
+    assert t_a.rounds == solo_a.rounds
+    np.testing.assert_allclose(t_a.result, solo_a.x, atol=1e-5, rtol=0)
+
+
+def test_tenant_validation():
+    srv = GraphServer(GW, slots=2, bs=BS)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        srv.submit("sssp", {"source": 0}, tenant="nope")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        srv.apply_delta(random_delta(GW, frac_add=0.01, seed=1), tenant="no")
+    srv.add_tenant("b", GW2)
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        srv.add_tenant("b", GW2)
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        GraphServer(GW, graphs={"default": GW2})
+    with pytest.raises(ValueError, match="at least one graph"):
+        GraphServer()
+
+
+# ---------------------------------------------------------------------------
+# byte-budgeted LRU result cache
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_evicts_oldest_within_budget():
+    from repro.serving import ResultCache
+
+    x = np.zeros(100, np.float32)          # 400 bytes + overhead per entry
+    per = x.nbytes + 256
+    c = ResultCache(max_bytes=3 * per)
+    for i in range(4):
+        c.put(("t", "a", i), x, 1, [0], 0, x0_fill=0.0)
+    assert len(c) == 3 and c.bytes <= 3 * per
+    assert c.get(("t", "a", 0), 0) is None          # LRU entry evicted
+    assert c.get(("t", "a", 1), 0) is not None      # ...and now refreshed
+    c.put(("t", "a", 9), x, 1, [0], 0, x0_fill=0.0)
+    assert c.get(("t", "a", 2), 0) is None          # 2 was the new LRU
+    assert c.get(("t", "a", 1), 0) is not None
+    assert c.stats()["evicted"] == 2
+    # an entry bigger than the whole budget is not retained
+    c.put(("t", "big", 0), np.zeros(10_000, np.float32), 1, [0], 0,
+          x0_fill=0.0)
+    assert c.get(("t", "big", 0), 0) is None
+    with pytest.raises(ValueError, match="max_bytes"):
+        ResultCache(max_bytes=-1)
+
+
+def test_server_cache_budget_end_to_end():
+    per_entry = GW.n * 4 + 256
+    srv = GraphServer(GW, slots=2, bs=BS, rounds_per_batch=4,
+                      cache_max_bytes=2 * per_entry)
+    for s in (0, 3, 9, 14):
+        srv.submit("ppr", {"seeds": [s]})
+    srv.run()
+    st = srv.cache.stats()
+    assert st["entries"] <= 2 and st["bytes"] <= 2 * per_entry
+    assert st["evicted"] >= 2
+    # the retained (most recent) entries still serve hits
+    t = srv.submit("ppr", {"seeds": [14]})
+    assert t.from_cache
