@@ -240,7 +240,7 @@ def make_cc(g: Graph) -> AlgoInstance:
                 a = parent[a]
             return a
 
-        for u, v in zip(g.src, g.dst):
+        for u, v in zip(g.src, g.dst, strict=True):
             ra, rb = find(int(u)), find(int(v))
             if ra != rb:
                 parent[max(ra, rb)] = min(ra, rb)

@@ -82,6 +82,10 @@ class EngineOptions:
     max_iters : round budget.
     mesh / axis : device mesh for ``engine="distributed"`` (None = one
         mesh axis over every visible device).
+    transfer_guard : device->host transfer sanitizer for the whole solve
+        (None = jax default, or one of ``"allow"`` / ``"log"`` /
+        ``"disallow"``); ``"disallow"`` turns any unaudited implicit
+        device->host readback inside the engines into a hard fault.
     """
 
     x_init: Optional[np.ndarray] = None
@@ -94,6 +98,7 @@ class EngineOptions:
     max_iters: int = 2000
     mesh: Any = None
     axis: str = "data"
+    transfer_guard: Optional[str] = None
 
 
 def validate_options(
@@ -123,6 +128,25 @@ def validate_options(
     if o.sweeps_per_call < 1:
         raise EngineOptionsError(
             f"sweeps_per_call must be >= 1, got {o.sweeps_per_call}"
+        )
+    if o.x_init is not None and np.ndim(o.x_init) not in (1, 2):
+        raise EngineOptionsError(
+            f"x_init must be (n,), (n, 1) or (n, d), "
+            f"got ndim={np.ndim(o.x_init)}"
+        )
+    if not isinstance(o.axis, str) or not o.axis:
+        raise EngineOptionsError(
+            f"axis must be a non-empty mesh-axis name, got {o.axis!r}"
+        )
+    if o.mesh is not None and engine != "distributed":
+        raise EngineOptionsError(
+            "mesh names the device mesh for engine='distributed'; "
+            f"engine={engine!r} runs on one device"
+        )
+    if o.transfer_guard not in (None, "allow", "log", "disallow"):
+        raise EngineOptionsError(
+            f"transfer_guard must be None, 'allow', 'log' or 'disallow', "
+            f"got {o.transfer_guard!r}"
         )
     if o.backend == "pallas":
         if engine != "async_block":
@@ -205,4 +229,13 @@ def solve(
         "async_block": async_block._solve,
         "distributed": distributed._solve,
     }[engine]
+    if o.transfer_guard is not None:
+        import jax
+
+        # direction-scoped on purpose: host->device staging of inputs is
+        # normal engine behavior; unaudited device->host readback is the bug
+        # class this sanitizer exists to catch (audited readouts go through
+        # jax.device_get, which the guard always permits)
+        with jax.transfer_guard_device_to_host(o.transfer_guard):
+            return impl(algo, o)
     return impl(algo, o)

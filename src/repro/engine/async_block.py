@@ -199,7 +199,7 @@ def _run_async_block_pallas(
         frontier=frontier, max_iters=max_iters,
     ), algo)
     ops = pack_algorithm(algo, bs)
-    x_start = harness.init_state(np.asarray(ops["x0"]), x_init, algo.n)
+    x_start = harness.init_state(ops["x0_host"], x_init, algo.n)
     if sweeps_per_call == 1 and frontier is None:
         out = _run_pallas(
             ops["rowptr"], ops["tilecols"], ops["tiles"], ops["c"], ops["x0"],
@@ -478,10 +478,13 @@ class AsyncBlockSession:
         # the state never leaves the device: the next batch (and any swap)
         # consumes this output buffer directly
         self.x = out[0]
+        rounds, col_done, col_rounds = jax.device_get(
+            (out[1], out[2], out[3])
+        )  # repro: allow-host-sync(per-batch convergence report for the caller)
         rep = BatchReport(
-            rounds=int(out[1]),
-            col_done=np.asarray(out[2]),
-            col_rounds=np.asarray(out[3], np.int32),
+            rounds=int(rounds),
+            col_done=np.asarray(col_done),
+            col_rounds=np.asarray(col_rounds, np.int32),
         )
         # fold into the cumulative device-side accounting: columns already
         # done before this batch only re-verified (their 1-round report is

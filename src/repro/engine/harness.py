@@ -333,12 +333,13 @@ def sweep_batched_loop(
     k = 0
     while k < max_iters and not col_done.all():
         x, deltas, active, dirty = batch_fn(x, dirty)
-        deltas_np = np.asarray(deltas)
-        active_np = np.asarray(active)
         # state-sum trace on device: the batch only ships the (sweeps, d)
         # delta/active rows and this one scalar to the host, never the state
         xm = x if rm is None else jnp.where(rm[:, None], x, 0.0)
-        batch_sum = float(jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0)))
+        deltas_np, active_np, batch_sum = jax.device_get((
+            deltas, active, jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0)),
+        ))  # repro: allow-host-sync(once-per-batch convergence trace readout)
+        batch_sum = float(batch_sum)
         for s in range(sweeps):
             if k >= max_iters or col_done.all():
                 break
@@ -361,6 +362,11 @@ def finalize(
     algo: AlgoInstance, x, k, col_done, col_rounds, res_buf, sum_buf, *_extra
 ) -> RunResult:
     """Convert raw loop outputs into a RunResult (d = 1 keeps 1-D x)."""
+    # the one end-of-run device->host readback; device_get passes the sweep
+    # drivers' host-side numpy outputs through untouched
+    x, k, col_done, col_rounds, res_buf, sum_buf = jax.device_get(
+        (x, k, col_done, col_rounds, res_buf, sum_buf)
+    )  # repro: allow-host-sync(end-of-run RunResult readout)
     k = int(k)
     xr = np.asarray(x)[: algo.n]
     if algo.d == 1:

@@ -1,0 +1,83 @@
+"""Declared per-kernel VMEM/SMEM budgets — the contract repro-lint enforces.
+
+Every ``pl.pallas_call`` in `repro.kernels` must have an entry here; the
+static checker (`tools.check.pallas_resources`) re-derives each kernel's
+VMEM/SMEM footprint from its BlockSpecs, scratch_shapes, and grid at the
+representative points below and fails the build when a footprint crosses its
+declared budget. The budgets are deliberately far below the ~16 MiB/core
+TPU VMEM: the pipeline double-buffers every windowed operand on top of what
+we count, and headroom is what lets a future PR widen ``d`` or ``bs``
+without renegotiating the kernel's memory story.
+
+Footprint model (all operands are 4-byte f32/int32):
+
+* scratch ``pltpu.VMEM`` / ``pltpu.SMEM`` shapes count at face value;
+* windowed BlockSpecs (shape + index map) count twice — Pallas
+  double-buffers pipelined windows;
+* ``memory_space=ANY`` operands live in HBM and count zero (their VMEM cost
+  is whatever scratch the kernel DMAs them into, already counted);
+* broadcast temporaries the kernel body materializes (the min/max
+  semirings' ``(bs, bs, dj)`` intermediate in `bsr_spmm`) are declared per
+  point as ``temp_bytes`` — the checker cannot see inside the traced body.
+
+Points carry every dimension name the kernel's shape expressions use
+(``bs``/``d``/``nb``/``sweeps``/``nnz``/``dj``; ``n`` derives as
+``nb * bs``). They are chosen to bracket real usage: the serving default
+(bs=64..256, d=8..64 slots), the kernel-bench sweep, and the SMEM-heavy
+many-blocks regime (the dirty bitmap scales with ``nb``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBudget:
+    """Declared resource ceiling for one pallas_call wrapper."""
+
+    vmem_limit_bytes: int
+    smem_limit_bytes: int
+    points: tuple[dict, ...]    # representative dims (+ optional temp_bytes)
+    notes: str = ""
+
+
+KiB = 1024
+MiB = 1024 * 1024
+
+KERNEL_BUDGETS: dict[str, KernelBudget] = {
+    "gs_multisweep_pallas": KernelBudget(
+        # measured at the widest point below: ~1.13 MiB VMEM, ~16 KiB SMEM
+        vmem_limit_bytes=2 * MiB,
+        smem_limit_bytes=32 * KiB,
+        points=(
+            # serving default: bs=256 blocks, 64 query columns
+            {"bs": 256, "d": 64, "nb": 32, "sweeps": 16, "nnz": 256},
+            # kernel-bench sweep shape
+            {"bs": 128, "d": 128, "nb": 64, "sweeps": 16, "nnz": 1024},
+            # many-blocks regime: the SMEM dirty bitmap scales with nb
+            {"bs": 16, "d": 8, "nb": 4096, "sweeps": 8, "nnz": 16384},
+        ),
+        notes="scratch holds 2 gather + 2 tile buffers (double-buffered "
+              "DMA), old/acc blocks, the (1, d) delta row; SMEM holds the "
+              "nb dirty flags + done bit",
+    ),
+    "bsr_spmm_pallas": KernelBudget(
+        # measured: ~0.38 MiB (plus_times), ~0.64 MiB (min family w/ temp)
+        vmem_limit_bytes=2 * MiB,
+        smem_limit_bytes=4 * KiB,
+        points=(
+            # plus_times runs full-width dj = d on the MXU (no broadcast temp)
+            {"bs": 128, "d": 128, "dj": 128, "nb": 64, "nnz": 512,
+             "temp_bytes": 0},
+            # broadcast semirings: ops.bsr_spmm narrows dj so the
+            # (bs, bs, dj) intermediate stays <= 512 KiB — declare it
+            {"bs": 128, "d": 64, "dj": 8, "nb": 64, "nnz": 512,
+             "temp_bytes": 128 * 128 * 8 * 4},
+            {"bs": 16, "d": 64, "dj": 64, "nb": 256, "nnz": 4096,
+             "temp_bytes": 16 * 16 * 64 * 4},
+        ),
+        notes="per step: one (1, bs, bs) tile window + (bs, dj) x/out "
+              "windows; min/max semirings add the declared (bs, bs, dj) "
+              "broadcast temporary (see ops.bsr_spmm's dj narrowing)",
+    ),
+}

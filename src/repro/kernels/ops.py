@@ -112,6 +112,7 @@ def pack_algorithm(algo: AlgoInstance, bs: int, d: int | None = None) -> dict:
         "tiles": jnp.asarray(bsr.tiles),
         "c": jnp.asarray(padm(algo.c, algo.c_pad_fill)),
         "x0": jnp.asarray(x0pad),
+        "x0_host": x0pad,  # host copy kept so warm-starts never read back x0
         "fixed": jnp.asarray(padm(algo.fixed, 1.0)),  # pads pinned
         "x": jnp.asarray(x0pad.copy()),
         "semiring": semiring,

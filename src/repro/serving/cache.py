@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
 import numpy as np
 
@@ -73,7 +73,7 @@ class ResultCache:
     refresh an entry; eviction pops the least recently used.
     """
 
-    def __init__(self, max_bytes: Optional[int] = None):
+    def __init__(self, max_bytes: Optional[int] = None) -> None:
         if max_bytes is not None and max_bytes < 0:
             raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
         self.max_bytes = max_bytes
@@ -88,7 +88,7 @@ class ResultCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, key: tuple, graph_version: int):
+    def get(self, key: tuple, graph_version: int) -> Optional[CacheEntry]:
         """The cached entry for ``key`` at ``graph_version``, else None."""
         e = self._entries.get(key)
         if e is None or e.graph_version != graph_version:
@@ -101,7 +101,7 @@ class ResultCache:
 
     def put(
         self, key: tuple, x: np.ndarray, rounds: int,
-        support_blocks, graph_version: int, x0_fill: float,
+        support_blocks: Iterable[int], graph_version: int, x0_fill: float,
     ) -> None:
         old = self._entries.pop(key, None)
         if old is not None:
@@ -124,7 +124,8 @@ class ResultCache:
             self.evicted += 1
 
     def apply_delta(
-        self, touched_blocks, new_version: int, n_new: int | None = None,
+        self, touched_blocks: Iterable[int], new_version: int,
+        n_new: int | None = None,
         select: Optional[Callable[[tuple], bool]] = None,
     ) -> None:
         """Promote entries untouched by the delta; drop the rest.

@@ -23,8 +23,12 @@ from __future__ import annotations
 
 import heapq
 import math
+from typing import TYPE_CHECKING, Any, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:  # server imports this module; type-only edge back
+    from repro.serving.server import Ticket
 
 POLICIES = ("fifo", "priority", "deadline")
 
@@ -45,7 +49,7 @@ COLUMN_PARAMS = {
 }
 
 
-def canon(value):
+def canon(value: Any) -> Any:
     """Canonicalize a parameter value into a hashable key component."""
     if isinstance(value, dict):
         return tuple(sorted((k, canon(v)) for k, v in value.items()))
@@ -81,13 +85,13 @@ class Scheduler:
     so one hot family cannot starve another's resident slots.
     """
 
-    def __init__(self, policy: str = "fifo"):
+    def __init__(self, policy: str = "fifo") -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.policy = policy
         self._queues: dict[tuple, list] = {}
 
-    def _key(self, ticket) -> tuple:
+    def _key(self, ticket: "Ticket") -> tuple:
         # every key ends in the unique ticket id: deterministic FIFO
         # tie-breaking, and heap entries never fall through to comparing
         # Ticket objects
@@ -101,18 +105,18 @@ class Scheduler:
         )
         return (edf, -ticket.priority, ticket.id)
 
-    def push(self, ticket) -> None:
+    def push(self, ticket: "Ticket") -> None:
         q = self._queues.setdefault(ticket.family, [])
         heapq.heappush(q, (self._key(ticket), ticket))
 
-    def pop(self, family: tuple):
+    def pop(self, family: tuple) -> Optional["Ticket"]:
         """Next ticket for ``family`` per policy, or None."""
         q = self._queues.get(family)
         if not q:
             return None
         return heapq.heappop(q)[1]
 
-    def peek(self, family: tuple):
+    def peek(self, family: tuple) -> Optional["Ticket"]:
         """The ticket :meth:`pop` would return, without removing it."""
         q = self._queues.get(family)
         return q[0][1] if q else None

@@ -60,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -167,6 +168,10 @@ class GraphServer:
         within eps; round counts reflect the warm continuation) or
         "restart" (recompute from x0 on the new graph; round counts stay
         solo-exact).
+    transfer_guard : device->host transfer sanitizer wrapped around every
+        :meth:`step` tick (None = jax default, or ``"allow"`` / ``"log"`` /
+        ``"disallow"``); with ``"disallow"`` any unaudited readback inside
+        the serving loop faults instead of silently syncing.
     """
 
     def __init__(
@@ -177,9 +182,15 @@ class GraphServer:
         cache_max_bytes: Optional[int] = None,
         refill: str = "continuous", delta_mode: str = "warm",
         max_rounds_per_query: int = 2000,
-    ):
+        transfer_guard: Optional[str] = None,
+    ) -> None:
         if refill not in ("continuous", "static"):
             raise ValueError(f"unknown refill mode {refill!r}")
+        if transfer_guard not in (None, "allow", "log", "disallow"):
+            raise ValueError(
+                f"transfer_guard must be None, 'allow', 'log' or 'disallow', "
+                f"got {transfer_guard!r}"
+            )
         if delta_mode not in ("warm", "restart"):
             raise ValueError(f"unknown delta_mode {delta_mode!r}")
         if slots < 1:
@@ -214,6 +225,7 @@ class GraphServer:
         self.refill = refill
         self.delta_mode = delta_mode
         self.max_rounds_per_query = max_rounds_per_query
+        self.transfer_guard = transfer_guard
         self.scheduler = Scheduler(policy)
         self.cache = ResultCache(max_bytes=cache_max_bytes) if cache else None
         self.stats = ServerStats(slots=slots)
@@ -293,6 +305,14 @@ class GraphServer:
         every tick gives every tenant with work a batch before any tenant
         gets a second one. Returns the number of family batches executed
         (0 = fully idle)."""
+        if self.transfer_guard is not None:
+            # every device->host edge inside a tick is audited (device_get
+            # + pragma); the guard makes any future unaudited one a fault
+            with jax.transfer_guard_device_to_host(self.transfer_guard):
+                return self._step_inner()
+        return self._step_inner()
+
+    def _step_inner(self) -> int:
         keys = list(self._families)
         keys += [k for k in self.scheduler.families() if k not in self._families]
         by_tenant: dict[str, list[tuple]] = {}
@@ -325,8 +345,9 @@ class GraphServer:
         rep = fam.session.run_batch(self.rounds_per_batch)
         self.stats.record_batch(len(occupied), rep.rounds, tenant=fam.tenant)
         # one host readout of the (d,)-sized accounting per family batch
-        col_done = np.asarray(fam.session.col_done)
-        col_rounds = np.asarray(fam.session.col_rounds)
+        col_done, col_rounds = jax.device_get(
+            (fam.session.col_done, fam.session.col_rounds)
+        )  # repro: allow-host-sync(per-batch (d,)-sized slot accounting)
         for j, t in occupied:
             # the session's cumulative accounting (reset per swap-in,
             # carried across delta rebuilds) is the single source of
@@ -514,7 +535,9 @@ class GraphServer:
     def _resolve(self, fam: _Family, j: int, t: Ticket, converged: bool) -> None:
         q = fam.queries[j]
         # the ONE (n,)-sized device->host transfer of a query's lifecycle
-        x = np.asarray(fam.session.state[:, j])
+        x = jax.device_get(
+            fam.session.state[:, j]
+        )  # repro: allow-host-sync(resolved column becomes the ticket result)
         t.result = x
         t.converged = converged
         t.status = "done"

@@ -41,7 +41,7 @@ def compressed_psum_tree(grads, axis_names, err_tree, n_ranks: int):
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(err_tree)
     means, errs = [], []
-    for g, e in zip(flat_g, flat_e):
+    for g, e in zip(flat_g, flat_e, strict=True):
         tot, ne = compressed_psum(g, axis_names, e)
         means.append(tot / n_ranks)
         errs.append(ne)

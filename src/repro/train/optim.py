@@ -96,7 +96,7 @@ def adamw_update(cfg: AdamWConfig, params, grads, state, update_shardings=None):
     flat_us = (treedef.flatten_up_to(update_shardings)
                if update_shardings is not None else [None] * len(flat_p))
     out = [upd(p, g, m, v, us)
-           for p, g, m, v, us in zip(flat_p, flat_g, flat_m, flat_v, flat_us)]
+           for p, g, m, v, us in zip(flat_p, flat_g, flat_m, flat_v, flat_us, strict=True)]
     new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])

@@ -21,3 +21,20 @@ except ModuleNotFoundError:
     _spec.loader.exec_module(_stub)
     sys.modules["hypothesis"] = _stub
     sys.modules["hypothesis.strategies"] = _stub.strategies
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def transfer_guard_disallow():
+    """Run the test body under the device->host transfer sanitizer.
+
+    Any *implicit* readback (np.asarray on a jax array, float()/int() on a
+    traced scalar, ...) raises; explicit jax.device_get stays allowed — the
+    runtime complement of the `tools.check` host-sync checker.
+    """
+    import jax
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield

@@ -1,0 +1,37 @@
+"""Seeded host-sync violations for the repro-lint self-tests.
+
+Never imported — tests feed this file to the checker as source. Line
+numbers are asserted exactly in tests/test_repro_lint.py; edit with care.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaks():
+    x = jnp.zeros((4, 4))
+    a = float(jnp.sum(x))
+    b = x.item()
+    c = np.asarray(x)
+    if x:
+        pass
+    d = jax.device_get(x)
+    e = jax.device_get(x)  # repro: allow-host-sync(audited test readout)
+    g = jax.device_get(x)  # repro: allow-host-sync()
+    return a, b, c, d, e, g
+
+
+def multiline_pragma_covers():
+    x = jnp.ones((2, 2))
+    y = jax.device_get(
+        x
+    )  # repro: allow-host-sync(pragma sits on the closing-paren line)
+    return y
+
+
+def host_only_stays_quiet(values):
+    arr = np.asarray(values)
+    total = float(np.sum(arr))
+    if arr.size:
+        total += int(arr[0])
+    return total

@@ -1,0 +1,17 @@
+"""Seeded options-drift violations for the repro-lint self-tests.
+
+A knob dataclass with one validated, documented field (``bs``) and one
+field nothing validates or documents (``unchecked``).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    bs: int = 8
+    unchecked: int = 0
+
+
+def validate_options(engine, o, algo=None):
+    if o.bs < 1:
+        raise ValueError("bs must be >= 1")

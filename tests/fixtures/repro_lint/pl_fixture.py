@@ -1,0 +1,39 @@
+"""Seeded Pallas resource violations for the repro-lint self-tests.
+
+Never imported (the dimension names are deliberately unbound) — the checker
+parses this as source and evaluates shapes at the budget points the test
+injects. Line numbers are asserted exactly in tests/test_repro_lint.py.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def bad_kernel(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bs, d), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bs, d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        input_output_aliases={5: 0},
+    )(x)
+
+
+def unbudgeted_kernel(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(4,),
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )(x)
+
+
+def unresolvable_kernel(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(4,),
+        scratch_shapes=[pltpu.VMEM((mystery_dim, 8), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )(x)

@@ -230,11 +230,12 @@ def _is_device(a):
     return isinstance(a, jax.Array)
 
 
-def test_session_state_stays_on_device(gw):
+def test_session_state_stays_on_device(gw, transfer_guard_disallow):
     """The tentpole's residency contract: packed state, operands, and
     per-column accounting are jax arrays after construction, after every
     run_batch, and after a column swap — host numpy appears only when the
-    caller reads a result out."""
+    caller reads a result out. Runs under the device->host transfer guard,
+    so any implicit readback in the session/engine path faults."""
     algo = personalized_pagerank(gw, [2, 7, 11, 42])
     ses = AsyncBlockSession(algo, bs=BS)
 
@@ -256,12 +257,12 @@ def test_session_state_stays_on_device(gw):
     # and the resident computation is still correct end to end
     solo = run_async_block(q, bs=BS)
     np.testing.assert_allclose(
-        np.asarray(ses.state[:, 1]), solo.x, rtol=0, atol=1e-6
+        jax.device_get(ses.state[:, 1]), solo.x, rtol=0, atol=1e-6
     )
-    assert int(np.asarray(ses.col_rounds)[1]) == solo.rounds
+    assert int(jax.device_get(ses.col_rounds)[1]) == solo.rounds
 
 
-def test_session_pallas_state_stays_on_device(gw):
+def test_session_pallas_state_stays_on_device(gw, transfer_guard_disallow):
     from repro.engine import multi_source_sssp
 
     # min semiring: selective updates make the resident megakernel state
@@ -274,16 +275,19 @@ def test_session_pallas_state_stays_on_device(gw):
     assert _is_device(ses.state)
     solo = run_async_block(algo, bs=BS)
     np.testing.assert_array_equal(
-        np.asarray(ses.state), np.asarray(solo.x, np.float32)
+        jax.device_get(ses.state), np.asarray(solo.x, np.float32)
     )
 
 
-def test_server_resolution_is_the_only_host_copy(gw):
+def test_server_resolution_is_the_only_host_copy(gw, transfer_guard_disallow):
     """End to end through the server: the family session's arrays remain
-    device arrays across ticks/swaps; the Ticket.result is host numpy."""
+    device arrays across ticks/swaps; the Ticket.result is host numpy.
+    The server's own sanitizer knob is also on, nested inside the fixture's
+    guard — both paths must hold."""
     from repro.serving import GraphServer
 
-    srv = GraphServer(gw, slots=2, bs=BS, rounds_per_batch=4)
+    srv = GraphServer(gw, slots=2, bs=BS, rounds_per_batch=4,
+                      transfer_guard="disallow")
     tickets = [srv.submit("ppr", {"seeds": [s]}) for s in (1, 2, 3, 4)]
     srv.run()
     fam = next(iter(srv._families.values()))
@@ -296,3 +300,64 @@ def test_server_resolution_is_the_only_host_copy(gw):
         )
         assert t.rounds == solo.rounds
         np.testing.assert_allclose(t.result, solo.x, rtol=0, atol=1e-6)
+
+
+# -------------------------------------------------- transfer-guard knob
+
+
+def test_transfer_guard_value_validated():
+    with pytest.raises(EngineOptionsError, match="transfer_guard"):
+        validate_options(
+            "async_block", EngineOptions(transfer_guard="everything")
+        )
+    for ok in (None, "allow", "log", "disallow"):
+        validate_options("async_block", EngineOptions(transfer_guard=ok))
+
+
+def test_mesh_rejected_outside_distributed():
+    with pytest.raises(EngineOptionsError, match="mesh"):
+        validate_options("async_block", EngineOptions(mesh=object()))
+    with pytest.raises(EngineOptionsError, match="mesh"):
+        validate_options("sync", EngineOptions(mesh=object()))
+
+
+def test_x_init_rank_validated():
+    with pytest.raises(EngineOptionsError, match="x_init"):
+        validate_options(
+            "async_block", EngineOptions(x_init=np.zeros((2, 2, 2)))
+        )
+    validate_options("async_block", EngineOptions(x_init=np.zeros(4)))
+    validate_options("async_block", EngineOptions(x_init=np.zeros((4, 2))))
+
+
+def test_axis_validated():
+    with pytest.raises(EngineOptionsError, match="axis"):
+        validate_options("distributed", EngineOptions(axis=""))
+
+
+@pytest.mark.parametrize("algo_name,params,reduce", CASES)
+def test_solve_under_transfer_guard_matches_plain(gw, algo_name, params,
+                                                  reduce):
+    """The engines run start-to-finish under the device->host guard: every
+    transfer in the hot path is an audited jax.device_get."""
+    algo = get_algorithm(algo_name, gw, **params)
+    plain = solve(algo, engine="async_block", bs=BS)
+    guarded = solve(algo, engine="async_block", bs=BS,
+                    transfer_guard="disallow")
+    _assert_same(plain, guarded, reduce)
+
+
+def test_solve_pallas_under_transfer_guard(gw):
+    algo = get_algorithm("sssp", gw, source=3)
+    plain = solve(algo, engine="async_block", bs=BS, backend="pallas",
+                  sweeps_per_call=4)
+    guarded = solve(algo, engine="async_block", bs=BS, backend="pallas",
+                    sweeps_per_call=4, transfer_guard="disallow")
+    _assert_same(plain, guarded, "min")
+
+
+def test_server_transfer_guard_rejects_bad_value(gw):
+    from repro.serving import GraphServer
+
+    with pytest.raises(ValueError, match="transfer_guard"):
+        GraphServer(gw, transfer_guard="everything")

@@ -81,7 +81,7 @@ def test_scan_best_gap_matches_sequential_reference(k, seed):
     ("paper line 18") tie-breaking, same best gap index."""
     from repro.core.gograph import _scan_best_gap
 
-    rng = np.random.RandomState(seed)
+    rng = np.random.default_rng(seed)
     # signed per-neighbor deltas incl. exact ties and zeros, plus a head pe
     delta_per = rng.choice([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0], size=k)
     pe0 = float(rng.choice([0.0, 0.5, 1.0, 3.0]))
@@ -125,7 +125,7 @@ def test_inserter_bitwise_identical_to_sequential_scan():
     ins = gg._Inserter(g.n)
     ref = _ReferenceInserter(g.n)
     orig = gg._scan_best_gap
-    rng = np.random.RandomState(0)
+    rng = np.random.default_rng(0)
     for v in rng.permutation(g.n):
         inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]].astype(np.int64)
         win = gw.weights[csc_eid[csc_indptr[v]:csc_indptr[v + 1]]]

@@ -32,8 +32,8 @@ def test_relabel_roundtrip():
     rank = rng.permutation(g.n)
     g2 = g.relabel(rank)
     # edges are preserved under relabeling
-    e1 = set(zip((rank[g.src]).tolist(), (rank[g.dst]).tolist()))
-    e2 = set(zip(g2.src.tolist(), g2.dst.tolist()))
+    e1 = set(zip((rank[g.src]).tolist(), (rank[g.dst]).tolist(), strict=True))
+    e2 = set(zip(g2.src.tolist(), g2.dst.tolist(), strict=True))
     assert e1 == e2
 
 
@@ -68,7 +68,7 @@ def test_pack_in_edges_complete():
         for j in range(be.e_max):
             if be.emask[i, j]:
                 recon.append((int(be.esrc[i, j]), int(be.edst[i, j]) + i * bs))
-    assert sorted(recon) == sorted(zip(g.src.tolist(), g.dst.tolist()))
+    assert sorted(recon) == sorted(zip(g.src.tolist(), g.dst.tolist(), strict=True))
 
 
 def test_pack_bsr_matches_dense():
@@ -138,7 +138,7 @@ def test_io_roundtrip(tmp_path):
     p = str(tmp_path / "g.txt")
     with open(p, "w") as f:
         f.write("# comment line\n")
-        for u, v in zip(g.src, g.dst):
+        for u, v in zip(g.src, g.dst, strict=True):
             f.write(f"{u} {v}\n")
     g2 = gio.load_edge_list(p)
     assert g2.n == g.n and g2.m == g.m

@@ -52,7 +52,7 @@ def test_graph_delta_apply_semantics():
     g2 = d.apply(g)
     assert g2.n == 5
     pairs = {(int(s), int(t)): float(w)
-             for s, t, w in zip(g2.src, g2.dst, g2.weights)}
+             for s, t, w in zip(g2.src, g2.dst, g2.weights, strict=True)}
     assert pairs == {(1, 2): 9.0, (2, 3): 3.0, (3, 4): 5.0, (4, 0): 6.0}
     # original untouched
     assert g.m == 3 and g.n == 4
@@ -103,7 +103,7 @@ def test_random_delta_shapes_and_ranges(graphs):
     assert (deg[gw.n:] > 0).all()
     # deleted pairs are gone
     keys2 = set((g2.src.astype(np.int64) * g2.n + g2.dst).tolist())
-    for s, t in zip(d.del_src, d.del_dst):
+    for s, t in zip(d.del_src, d.del_dst, strict=True):
         assert int(s) * g2.n + int(t) not in keys2
 
 

@@ -12,7 +12,7 @@ from repro.kernels import bsr_spmm, gs_sweep
 from repro.kernels.ops import pack_algorithm, run_async_block_pallas
 from repro.kernels.ref import ref_bsr_spmm, ref_gs_sweep
 
-RNG = np.random.RandomState(0)
+RNG = np.random.default_rng(0)
 
 SEMIRINGS = ["plus_times", "min_plus", "max_min", "max_times"]
 
@@ -30,8 +30,8 @@ def _rand_tiles(nnz, bs, semiring):
     """Random tiles: ~20% real entries, the rest the semiring's in-tile fill."""
     from repro.kernels.semirings import TILE_FILL
 
-    real = RNG.rand(nnz, bs, bs) < 0.2
-    vals = (RNG.rand(nnz, bs, bs) * 5).astype(np.float32)
+    real = RNG.random((nnz, bs, bs)) < 0.2
+    vals = (RNG.random((nnz, bs, bs)) * 5).astype(np.float32)
     return np.where(real, vals, np.float32(TILE_FILL[semiring])).astype(np.float32)
 
 
@@ -41,11 +41,11 @@ def _flat_operands(bs, d, nb, kmax, dtype, semiring):
     counts = np.arange(nb) % (kmax + 1)
     rowptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
     nnz = int(rowptr[-1])
-    tilecols = RNG.randint(0, nb, size=max(1, nnz)).astype(np.int32)
+    tilecols = RNG.integers(0, nb, size=max(1, nnz)).astype(np.int32)
     tilerows = (np.repeat(np.arange(nb), counts).astype(np.int32)
                 if nnz else np.zeros(1, np.int32))
     tiles = _rand_tiles(max(1, nnz), bs, semiring)
-    x = RNG.rand(nb * bs, d).astype(np.float32)
+    x = RNG.random((nb * bs, d)).astype(np.float32)
     return (jnp.asarray(rowptr), jnp.asarray(tilerows), jnp.asarray(tilecols),
             jnp.asarray(tiles).astype(dtype), jnp.asarray(x).astype(dtype))
 

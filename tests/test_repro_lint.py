@@ -1,0 +1,294 @@
+"""Self-tests for the repro-lint suite (`tools.check`) — PR tentpole.
+
+Two layers:
+
+1. **Fixture true-positives** — each checker is fed a source/registry
+   fixture with seeded violations and must report exactly the expected
+   (rule, line) set: a checker that goes quiet on its own fixture is dead
+   code, not a gate. The SR002 fixture is the PR 2 regression: a ``max``
+   semiring registered with the *min* accumulator identity — the drift that
+   once made ``max_old`` combines reduce from the wrong end of the lattice.
+2. **Clean tree** — every checker runs green on the repo itself, so the CI
+   gate (`python -m tools.check`) is enforceable from this commit on.
+"""
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)  # `tools` lives at the repo root
+
+from tools.check import host_sync, options_drift, pallas_resources  # noqa: E402
+from tools.check import semiring_contracts as sc  # noqa: E402
+from tools.check.common import (  # noqa: E402
+    Finding,
+    apply_pragmas,
+    parse_pragmas,
+)
+
+FIX = os.path.join(ROOT, "tests", "fixtures", "repro_lint")
+
+
+def _read(name):
+    with open(os.path.join(FIX, name), encoding="utf-8") as fh:
+        return fh.read()
+
+
+# ------------------------------------------------------------- host-sync
+
+
+def test_host_sync_fixture_exact_findings():
+    findings = host_sync.check_source(_read("hs_fixture.py"), "hs_fixture.py")
+    got = sorted((f.rule, f.line) for f in findings)
+    assert got == [
+        ("HS001", 13),   # float(jnp.sum(x))
+        ("HS002", 14),   # x.item()
+        ("HS003", 15),   # np.asarray(x)
+        ("HS004", 16),   # if x:
+        ("HS005", 18),   # bare jax.device_get
+        ("HS006", 20),   # pragma with empty reason
+    ]
+    # the pragma'd device_get (line 19) and the whole multiline_pragma_covers
+    # / host_only_stays_quiet bodies must stay silent
+    assert not any(f.line in (19, 26, 27, 28) for f in findings)
+    assert not any(f.line >= 32 for f in findings)
+
+
+def test_pragma_covers_multiline_expression():
+    src = "\n".join([
+        "import jax",
+        "def f(x):",
+        "    return jax.device_get(",
+        "        x",
+        "    )  # repro: allow-host-sync(reason on closing paren)",
+    ])
+    assert host_sync.check_source(src, "m.py") == []
+
+
+def test_pragma_on_unrelated_line_does_not_suppress():
+    src = "\n".join([
+        "import jax",
+        "# repro: allow-host-sync(floating pragma far away)",
+        "",
+        "def f(x):",
+        "    return jax.device_get(x)",
+    ])
+    findings = host_sync.check_source(src, "m.py")
+    assert [(f.rule, f.line) for f in findings] == [("HS005", 5)]
+
+
+def test_jaxiness_crosses_jit_and_session_attrs():
+    src = "\n".join([
+        "import jax",
+        "import numpy as np",
+        "from functools import partial",
+        "@partial(jax.jit, static_argnums=0)",
+        "def _run(n, x):",
+        "    return x",
+        "def caller(x, fam):",
+        "    out = _run(4, x)",
+        "    a = float(out)",               # HS001 via jit-returned name
+        "    b = np.asarray(fam.session.state)",  # HS003 via DEVICE_ATTRS
+        "    return a, b",
+    ])
+    rules = sorted((f.rule, f.line) for f in host_sync.check_source(src, "m.py"))
+    assert rules == [("HS001", 9), ("HS003", 10)]
+
+
+def test_apply_pragmas_reports_unreasoned_pragma():
+    src = "x = 1  # repro: allow-host-sync()\n"
+    out = apply_pragmas([], parse_pragmas(src), "m.py")
+    assert [(f.rule, f.line) for f in out] == [("HS006", 1)]
+    assert isinstance(out[0], Finding)
+
+
+def test_host_sync_clean_on_repo_hot_paths():
+    assert host_sync.run(ROOT) == []
+
+
+# -------------------------------------------------------------- semiring
+
+
+_BIG = sc.REDUCE_IDENTITY["min"]
+
+
+def _tables(**over):
+    base = dict(
+        kernel_semiring={("max", "min"): "max_min"},
+        acc_identity={"max_min": -_BIG},
+        tile_fill={"max_min": 0.0},
+        delta_metric={"max_min": "linf"},
+        supported={("max_min", "max_old")},
+    )
+    base.update(over)
+    return sc.Tables(**base)
+
+
+def test_sr002_pr2_max_old_min_identity_regression():
+    """The PR 2 bug, reconstructed: ACC_IDENTITY for the max semiring set to
+    the *min* lattice end (+BIG). The checker must name it."""
+    bad = _tables(acc_identity={"max_min": _BIG})
+    rules = [f.rule for f in sc.check_tables(bad)]
+    assert rules == ["SR002"]
+    assert "PR 2" in sc.check_tables(bad)[0].message
+
+
+def test_sr001_missing_registry_entries():
+    bad = _tables(delta_metric={}, supported={("ghost", "max_old")})
+    rules = sorted(f.rule for f in sc.check_tables(bad))
+    assert rules == ["SR001", "SR001"]  # missing DELTA_METRIC + ghost pair
+
+
+def test_sr003_sr004_sr006_algorithm_contracts():
+    t = _tables()
+    semiring = types.SimpleNamespace
+    inst = lambda red, op, comb, res: types.SimpleNamespace(  # noqa: E731
+        semiring=semiring(reduce=red, edge_op=op), combine=comb, residual=res
+    )
+    instances = {
+        "unmapped": inst("min", "mul", "replace", "linf"),      # SR003
+        "unsupported": inst("max", "min", "changed", "linf"),   # SR003
+        "drifted": inst("max", "min", "max_old", "l2"),         # SR004
+    }
+    rules = sorted(f.rule for f in sc.check_algorithm_contracts(t, instances))
+    assert rules == ["SR003", "SR003", "SR004"]
+
+    t2 = sc.Tables(
+        kernel_semiring={("sum", "add"): "plus_plus"},
+        acc_identity={"plus_plus": 0.0}, tile_fill={"plus_plus": 0.0},
+        delta_metric={"plus_plus": "linf"},
+        supported={("plus_plus", "accum")},
+    )
+    bad_sum = {"nonlinear": inst("sum", "add", "accum", "linf")}
+    rules = sorted(f.rule for f in sc.check_algorithm_contracts(t2, bad_sum))
+    assert rules == ["SR006"]  # sum-reduce but not the linear replace/mul form
+
+
+def test_sr005_boundary_that_fails_to_raise_is_flagged():
+    ok = sc._expect_not_implemented(
+        lambda: (_ for _ in ()).throw(NotImplementedError()), "good boundary"
+    )
+    assert ok is None
+    f = sc._expect_not_implemented(lambda: None, "silent boundary")
+    assert f is not None and f.rule == "SR005"
+    f = sc._expect_not_implemented(
+        lambda: (_ for _ in ()).throw(KeyError("x")), "wrong exception"
+    )
+    assert f is not None and f.rule == "SR005"
+
+
+def test_semiring_contracts_clean_on_repo_registries():
+    assert sc.run(ROOT) == []
+
+
+# ---------------------------------------------------------------- pallas
+
+
+def _pl_budgets():
+    from repro.kernels.budgets import KernelBudget
+
+    return {
+        "bad_kernel": KernelBudget(
+            vmem_limit_bytes=4096, smem_limit_bytes=1024,
+            points=({"bs": 64, "d": 64, "nb": 4},),
+        ),
+        "unresolvable_kernel": KernelBudget(
+            vmem_limit_bytes=65536, smem_limit_bytes=1024,
+            points=({"bs": 8},),
+        ),
+        "ghost_kernel": KernelBudget(
+            vmem_limit_bytes=1, smem_limit_bytes=1, points=({},),
+        ),
+    }
+
+
+def test_pallas_fixture_exact_findings():
+    sites = pallas_resources.collect_sites(
+        [os.path.join(FIX, "pl_fixture.py")], FIX
+    )
+    findings = pallas_resources.check_sites(sites, _pl_budgets())
+    got = sorted((f.rule, f.path, f.line) for f in findings)
+    assert got == [
+        ("PL001", "pl_fixture.py", 14),  # VMEM 81920 B over the 4096 B budget
+        ("PL002", "<budgets>", 0),       # ghost_kernel: dead contract
+        ("PL002", "pl_fixture.py", 26),  # unbudgeted_kernel: no budget entry
+        ("PL003", "pl_fixture.py", 17),  # in_spec lambda arity vs grid rank
+        ("PL003", "pl_fixture.py", 18),  # out_spec 3 coords, rank-2 block
+        ("PL004", "pl_fixture.py", 14),  # alias {5: 0} out of range
+        ("PL005", "pl_fixture.py", 34),  # mystery_dim not in the point env
+    ]
+
+
+def test_pallas_footprint_model_counts_double_buffering():
+    sites = pallas_resources.collect_sites(
+        [os.path.join(FIX, "pl_fixture.py")], FIX
+    )
+    site = next(s for s in sites if s.name == "bad_kernel")
+    env = {"bs": 64, "d": 64, "nb": 4, "n": 256}
+    vmem, smem = pallas_resources._footprint_at(site, env)
+    # scratch (64x64) + 2x in window + 2x out window, 4 B/elem
+    assert vmem == 64 * 64 * 4 * 5
+    assert smem == 0
+
+
+def test_pallas_clean_on_repo_kernels():
+    assert pallas_resources.run(ROOT) == []
+
+
+def test_repo_kernel_footprints_fit_declared_budgets_with_headroom():
+    """The README table inputs: every declared point resolves and lands
+    under its budget (check_sites passing is the gate; this pins the
+    magnitudes so a budget edit that flips the math is visible here)."""
+    from repro.kernels.budgets import KERNEL_BUDGETS
+
+    rows = pallas_resources.footprints(ROOT)
+    assert set(rows) == set(KERNEL_BUDGETS)
+    for name, points in rows.items():
+        b = KERNEL_BUDGETS[name]
+        assert len(points) == len(b.points)
+        for _point, vmem, smem in points:
+            assert 0 < vmem <= b.vmem_limit_bytes
+            assert smem <= b.smem_limit_bytes
+
+
+# --------------------------------------------------------------- options
+
+
+def test_options_fixture_exact_findings():
+    findings = options_drift.check_module(
+        _read("od_fixture.py"), "od_fixture.py", "| `bs` | block size |"
+    )
+    got = sorted((f.rule, f.line) for f in findings)
+    assert got == [("OD001", 12), ("OD002", 0)]
+    assert all("unchecked" in f.message for f in findings)
+
+
+def test_options_clean_on_repo_api():
+    assert options_drift.run(ROOT) == []
+
+
+# ------------------------------------------------------------ full gate
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.check", "--root", ROOT],
+        cwd=ROOT, capture_output=True, text=True,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro-lint: clean" in proc.stdout
+
+
+def test_budget_identity_sanity():
+    # REDUCE_IDENTITY mirrors engine.algorithms.BIG exactly
+    from repro.engine.algorithms import BIG
+
+    assert sc.REDUCE_IDENTITY["min"] == float(np.float32(BIG))
+    assert sc.REDUCE_IDENTITY["max"] == -float(np.float32(BIG))
+    assert sc.REDUCE_IDENTITY["sum"] == 0.0

@@ -331,7 +331,7 @@ def test_continuous_batching_beats_static_on_skewed_rounds():
                           refill=refill, cache=False)
         ts = [srv.submit("sssp", {"source": s}) for s in sources]
         srv.run()
-        for t, s in zip(ts, sources):
+        for t, s in zip(ts, sources, strict=True):
             solo = _solo("sssp", s, graph=gw, key=("skew", s))
             assert t.rounds == solo.rounds
             np.testing.assert_array_equal(t.result, solo.x)

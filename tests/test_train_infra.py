@@ -273,7 +273,7 @@ from repro.train.grad_compress import compressed_psum_tree, init_error_tree
 from repro.runtime.jax_compat import make_mesh, shard_map
 
 mesh = make_mesh((8,), ('data',))
-g = jnp.asarray(np.random.RandomState(0).randn(8, 64).astype(np.float32))
+g = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)).astype(np.float32))
 
 def f(gl, err):
     mean, err = compressed_psum_tree({'g': gl}, ('data',), {'g': err}, 8)

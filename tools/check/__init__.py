@@ -1,0 +1,36 @@
+"""repro-lint: the static gate over the repo's runtime invariants.
+
+Four checkers, one exit code (see each module's docstring for rules):
+
+* `tools.check.host_sync`          — device-residency / host-sync leaks
+* `tools.check.semiring_contracts` — kernel/engine registry consistency
+* `tools.check.pallas_resources`   — VMEM/SMEM budgets, grid/rank, aliasing
+* `tools.check.options_drift`      — EngineOptions validation/doc coverage
+
+Run ``python -m tools.check`` from the repo root (CI runs it as the
+``static-analysis`` job). The runtime complement is the transfer-guard
+sanitizer: ``EngineOptions(transfer_guard="disallow")`` (and the
+``transfer_guard_disallow`` test fixture) turns any unaudited device->host
+transfer into a hard fault on accelerators.
+"""
+from __future__ import annotations
+
+from tools.check.common import Finding
+
+__all__ = ["Finding", "run_all"]
+
+
+def run_all(root: str) -> list[Finding]:
+    """Run every checker; returns all findings (empty = clean tree)."""
+    from tools.check import (
+        host_sync,
+        options_drift,
+        pallas_resources,
+        semiring_contracts,
+    )
+
+    findings: list[Finding] = []
+    for checker in (host_sync, semiring_contracts, pallas_resources,
+                    options_drift):
+        findings.extend(checker.run(root))
+    return findings

@@ -1,0 +1,41 @@
+"""CLI for repro-lint: ``python -m tools.check [--root DIR]``.
+
+Prints one line per finding (``path:line: RULE [checker] message``) and
+exits 1 when any survive pragma filtering; exits 0 on a clean tree.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m tools.check")
+    parser.add_argument(
+        "--root", default=None,
+        help="repo root (default: the directory containing tools/)",
+    )
+    args = parser.parse_args(argv)
+    root = args.root or os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    src = os.path.join(root, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)  # registry checkers import repro.*
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from tools.check import run_all
+
+    findings = run_all(root)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"repro-lint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("repro-lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,103 @@
+"""Options-drift checker (rules OD001-OD002).
+
+`EngineOptions` is the single knob surface of the engines and
+`validate_options` its single validation pass — that was PR 6's whole
+point. The failure mode of single-point designs is silent drift: a field
+added to the dataclass but never validated is a knob that typos and
+nonsense values pass straight through, and a field missing from the README
+knob table is a knob nobody can discover. This checker parses the API
+module and asserts, for every declared `EngineOptions` field:
+
+OD001  `validate_options` never reads ``o.<field>`` (unvalidated knob)
+OD002  the README knob table never mentions `` `<field>` `` (undocumented
+       knob)
+
+Both checks are AST/text-level so they also catch fields that *exist* but
+are dead: deleting a field while its validation lingers is caught by the
+ordinary ruff/mypy lane, so this checker only guards the add-without-wiring
+direction.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Optional
+
+from tools.check.common import Finding
+
+CHECKER = "options"
+
+API_PATH = "src/repro/engine/api.py"
+README_PATH = "README.md"
+
+
+def _class_fields(tree: ast.Module, class_name: str) -> dict[str, int]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            return {
+                item.target.id: item.lineno
+                for item in node.body
+                if isinstance(item, ast.AnnAssign)
+                and isinstance(item.target, ast.Name)
+            }
+    return {}
+
+
+def _validated_fields(tree: ast.Module, fn_name: str,
+                      param: str) -> Optional[set[str]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == fn_name:
+            return {
+                sub.attr for sub in ast.walk(node)
+                if isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name) and sub.value.id == param
+            }
+    return None
+
+
+def check_module(
+    api_source: str, api_path: str, readme_text: Optional[str],
+    readme_path: str = README_PATH, *,
+    options_class: str = "EngineOptions",
+    validate_fn: str = "validate_options", param: str = "o",
+) -> list[Finding]:
+    tree = ast.parse(api_source)
+    fields = _class_fields(tree, options_class)
+    findings: list[Finding] = []
+    if not fields:
+        return [Finding(
+            CHECKER, "OD001", api_path, 0,
+            f"no {options_class} dataclass with annotated fields found",
+        )]
+    validated = _validated_fields(tree, validate_fn, param)
+    if validated is None:
+        return [Finding(
+            CHECKER, "OD001", api_path, 0,
+            f"no {validate_fn}() function found to check coverage against",
+        )]
+    for name, line in sorted(fields.items()):
+        if name not in validated:
+            findings.append(Finding(
+                CHECKER, "OD001", api_path, line,
+                f"{options_class}.{name} is never read by {validate_fn}(); "
+                f"every knob gets validated in the one pass (even if the "
+                f"check is just a type/shape guard)",
+            ))
+        if readme_text is not None and f"`{name}`" not in readme_text:
+            findings.append(Finding(
+                CHECKER, "OD002", readme_path, 0,
+                f"{options_class}.{name} is missing from the README knob "
+                f"table (search key: `{name}`)",
+            ))
+    return findings
+
+
+def run(root: str) -> list[Finding]:
+    with open(os.path.join(root, API_PATH), encoding="utf-8") as fh:
+        api_source = fh.read()
+    readme = os.path.join(root, README_PATH)
+    readme_text = None
+    if os.path.exists(readme):
+        with open(readme, encoding="utf-8") as fh:
+            readme_text = fh.read()
+    return check_module(api_source, API_PATH, readme_text)

@@ -1,0 +1,233 @@
+"""Semiring registry contract checker (rules SR001-SR006).
+
+The kernels and the engines meet at three registries — `kernels.ops.
+_KERNEL_SEMIRING` ((reduce, edge_op) -> kernel semiring name),
+`kernels.semirings.ACC_IDENTITY` / `TILE_FILL` / `DELTA_METRIC`, and
+`kernels.gs_sweep._SUPPORTED` ((semiring, combine) pairs the fused kernel
+implements). PR 2's latent bug was exactly a drift between them: ``max_old``
+combines ran against the *min*-semiring accumulator identity and silently
+computed garbage shaped like an answer. This checker re-verifies the whole
+contract surface on every run:
+
+SR001  a kernel semiring reachable from ``pack_algorithm`` is missing an
+       ACC_IDENTITY / TILE_FILL / DELTA_METRIC entry
+SR002  ACC_IDENTITY disagrees with the algebraic reduce identity of the
+       (reduce, edge_op) pair that maps to it — the PR 2 bug class
+SR003  a registered algorithm's (semiring, combine) pair is not in the
+       fused kernel's _SUPPORTED set (it would die at the kernel boundary
+       instead of being served)
+SR004  a registered algorithm's residual kind disagrees with the kernel's
+       DELTA_METRIC for its semiring (in-kernel and host convergence
+       decisions would diverge)
+SR005  an unsupported pair fails to raise NotImplementedError at a kernel
+       boundary (pack_algorithm / gs_sweep._check_pair / bsr_spmm_pallas)
+SR006  a sum-reduce algorithm is registered whose update is not the linear
+       ``replace``/``mul`` form `run_incremental`'s Maiter-style delta
+       correction assumes (dense_residual would assert at serving time)
+
+The table checks (`check_tables` / `check_algorithm_contracts`) take the
+registries as *arguments* so the fixture self-tests can feed broken copies;
+`run` wires in the real ones plus the dynamic SR005 probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Optional
+
+from tools.check.common import Finding
+
+CHECKER = "semiring"
+
+# Algebraic identity of each reduce direction; BIG mirrors algorithms.BIG.
+_BIG = float(__import__("numpy").float32(3.0e38))
+REDUCE_IDENTITY = {"sum": 0.0, "min": _BIG, "max": -_BIG}
+
+
+@dataclasses.dataclass(frozen=True)
+class Tables:
+    """The registry surface under contract, decoupled for fixture injection."""
+
+    kernel_semiring: dict   # (reduce, edge_op) -> semiring name
+    acc_identity: dict      # semiring name -> accumulator identity
+    tile_fill: dict         # semiring name -> absent-edge in-tile fill
+    delta_metric: dict      # semiring name -> in-kernel convergence metric
+    supported: set          # {(semiring name, combine)} the fused kernel runs
+
+
+def _f(rule: str, message: str, path: str = "", line: int = 0) -> Finding:
+    return Finding(CHECKER, rule, path or "<registry>", line, message)
+
+
+def check_tables(t: Tables) -> list[Finding]:
+    """Registry completeness + the PR 2 identity-consistency invariant."""
+    out: list[Finding] = []
+    for pair, name in sorted(t.kernel_semiring.items()):
+        for table, label in ((t.acc_identity, "ACC_IDENTITY"),
+                             (t.tile_fill, "TILE_FILL"),
+                             (t.delta_metric, "DELTA_METRIC")):
+            if name not in table:
+                out.append(_f(
+                    "SR001",
+                    f"kernel semiring {name!r} (reachable from pack_algorithm "
+                    f"via {pair}) has no {label} entry",
+                ))
+        reduce = pair[0]
+        expect = REDUCE_IDENTITY.get(reduce)
+        got = t.acc_identity.get(name)
+        if expect is not None and got is not None and got != expect:
+            out.append(_f(
+                "SR002",
+                f"ACC_IDENTITY[{name!r}] = {got!r} but reduce={reduce!r} "
+                f"requires identity {expect!r} — the exact max_old/min-"
+                f"identity drift PR 2 fixed; the kernel would reduce from "
+                f"the wrong end of the lattice",
+            ))
+    for name, combine in sorted(t.supported):
+        if name not in t.acc_identity:
+            out.append(_f(
+                "SR001",
+                f"_SUPPORTED pair ({name!r}, {combine!r}) names a semiring "
+                f"with no ACC_IDENTITY entry",
+            ))
+    return out
+
+
+def check_algorithm_contracts(
+    t: Tables, instances: dict[str, object]
+) -> list[Finding]:
+    """Every registered algorithm must be kernel-servable and convergence-
+    consistent; sum algorithms must satisfy run_incremental's linearity."""
+    out: list[Finding] = []
+    for algo_name, inst in sorted(instances.items()):
+        sem = inst.semiring
+        key = (sem.reduce, sem.edge_op)
+        kname = t.kernel_semiring.get(key)
+        if kname is None:
+            out.append(_f(
+                "SR003",
+                f"algorithm {algo_name!r} uses pair {key} with no kernel "
+                f"semiring mapping; backend='pallas' would reject it",
+            ))
+            continue
+        if (kname, inst.combine) not in t.supported:
+            out.append(_f(
+                "SR003",
+                f"algorithm {algo_name!r} needs ({kname!r}, "
+                f"{inst.combine!r}) which gs_sweep._SUPPORTED does not "
+                f"implement",
+            ))
+        metric = t.delta_metric.get(kname)
+        if metric is not None and metric != inst.residual:
+            out.append(_f(
+                "SR004",
+                f"algorithm {algo_name!r}: residual={inst.residual!r} but "
+                f"DELTA_METRIC[{kname!r}] = {metric!r}; in-kernel and host "
+                f"convergence would disagree",
+            ))
+        if sem.reduce == "sum" and (
+                inst.combine != "replace" or sem.edge_op != "mul"):
+            out.append(_f(
+                "SR006",
+                f"algorithm {algo_name!r} is sum-reduce but not the linear "
+                f"replace/mul form; run_incremental's delta correction "
+                f"assumes x* = c + Wx* and would be unsound for it",
+            ))
+    return out
+
+
+def _expect_not_implemented(fn: Callable, what: str) -> Optional[Finding]:
+    try:
+        fn()
+    except NotImplementedError:
+        return None
+    except Exception as e:  # noqa: BLE001 - any other escape is the finding
+        return _f(
+            "SR005",
+            f"{what} raised {type(e).__name__} instead of "
+            f"NotImplementedError for an unsupported pair",
+        )
+    return _f(
+        "SR005",
+        f"{what} accepted an unsupported semiring/combine pair instead of "
+        f"raising NotImplementedError",
+    )
+
+
+def build_probe_instances() -> dict[str, object]:
+    """Instantiate every registered algorithm on a tiny probe graph."""
+    import numpy as np
+
+    from repro.engine.algorithms import ALGORITHMS, get_algorithm
+    from repro.graphs.graph import Graph
+
+    g = Graph(
+        4,
+        np.array([0, 1, 2, 0], np.int32),
+        np.array([1, 2, 3, 3], np.int32),
+        np.array([0.5, 0.25, 0.75, 1.0], np.float32),
+    )
+    guesses = {"source": 0, "sources": [0, 1], "seeds": [0], "target": 3,
+               "targets": [3]}
+    out: dict[str, object] = {}
+    for name, ctor in ALGORITHMS.items():
+        params = {}
+        for p in inspect.signature(ctor).parameters.values():
+            if (p.default is inspect.Parameter.empty and p.name != "g"
+                    and p.kind not in (p.VAR_POSITIONAL, p.VAR_KEYWORD)
+                    and p.name in guesses):
+                params[p.name] = guesses[p.name]
+        out[name] = get_algorithm(name, g, **params)
+    return out
+
+
+def run(root: str) -> list[Finding]:
+    import dataclasses as dc
+
+    from repro.engine.algorithms import Semiring
+    from repro.kernels import semirings as S
+    from repro.kernels.gs_sweep import _SUPPORTED, _check_pair
+    from repro.kernels.ops import _KERNEL_SEMIRING, pack_algorithm
+
+    tables = Tables(
+        kernel_semiring=dict(_KERNEL_SEMIRING),
+        acc_identity=dict(S.ACC_IDENTITY),
+        tile_fill=dict(S.TILE_FILL),
+        delta_metric=dict(S.DELTA_METRIC),
+        supported=set(_SUPPORTED),
+    )
+    findings = check_tables(tables)
+    instances = build_probe_instances()
+    findings.extend(check_algorithm_contracts(tables, instances))
+
+    # SR005: unsupported pairs must die loudly at every kernel boundary
+    bad_algo = dc.replace(
+        next(iter(instances.values())), semiring=Semiring("min", "mul"),
+        exact_fn=None, params=None,
+    )
+    probes = [
+        (lambda: pack_algorithm(bad_algo, 4),
+         "kernels.ops.pack_algorithm"),
+        (lambda: _check_pair("min_plus", "replace"),
+         "kernels.gs_sweep._check_pair (mismatched combine)"),
+        (lambda: _check_pair("bogus", "replace"),
+         "kernels.gs_sweep._check_pair (unknown semiring)"),
+        (_probe_bsr_spmm, "kernels.bsr_spmm.bsr_spmm_pallas"),
+    ]
+    for fn, what in probes:
+        f = _expect_not_implemented(fn, what)
+        if f is not None:
+            findings.append(f)
+    return findings
+
+
+def _probe_bsr_spmm():
+    import numpy as np
+
+    from repro.kernels.bsr_spmm import bsr_spmm_pallas
+
+    bsr_spmm_pallas(
+        np.zeros(2, np.int32), np.zeros(1, np.int32), np.zeros(1, np.int32),
+        np.zeros((1, 4, 4), np.float32), np.zeros((4, 1), np.float32),
+        semiring="bogus", bs=4, dj=1, interpret=True,
+    )
