@@ -27,6 +27,7 @@ MODULES = [
     "batched_queries",        # batched multi-query engine throughput
     "incremental",            # evolving graphs: warm vs cold serving
     "serving_bench",          # continuous vs static batching (GraphServer)
+    "push_bench",             # vertex-granular push vs block sweeps on deltas
 ]
 
 

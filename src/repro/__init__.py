@@ -39,6 +39,8 @@ __all__ = [
     "run_sync",
     "run_async_block",
     "run_distributed",
+    "run_push",
+    "estimate_frontier_fraction",
     # incremental + serving
     "run_incremental",
     "GraphDelta",
@@ -52,7 +54,8 @@ _ENGINE = {
     "get_algorithm", "ALGORITHMS", "AlgoInstance", "personalized_pagerank",
     "multi_source_sssp", "make_personalized_pagerank",
     "make_multi_source_sssp", "remake", "run_sync", "run_async_block",
-    "run_distributed", "run_incremental",
+    "run_distributed", "run_push", "estimate_frontier_fraction",
+    "run_incremental",
 }
 _SERVING = {"GraphServer", "Ticket"}
 _GRAPHS = {"GraphDelta": "repro.graphs.delta", "Graph": "repro.graphs.graph"}

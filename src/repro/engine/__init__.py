@@ -18,6 +18,7 @@ from repro.engine.async_block import AsyncBlockSession, run_async_block
 from repro.engine.distributed import run_distributed
 from repro.engine.incremental import permute_state, run_incremental, warm_state
 from repro.engine.priority import run_priority_block
+from repro.engine.push import estimate_frontier_fraction, run_push
 from repro.engine.sync import run_sync
 
 __all__ = [
@@ -38,6 +39,8 @@ __all__ = [
     "AsyncBlockSession",
     "run_distributed",
     "run_priority_block",
+    "run_push",
+    "estimate_frontier_fraction",
     "run_incremental",
     "warm_state",
     "permute_state",

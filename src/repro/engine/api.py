@@ -37,7 +37,7 @@ if TYPE_CHECKING:  # avoid a module cycle: the engines import this module
     from repro.engine.algorithms import AlgoInstance
     from repro.engine.convergence import RunResult
 
-ENGINES = ("sync", "async_block", "distributed")
+ENGINES = ("sync", "async_block", "distributed", "push")
 BACKENDS = ("jax", "pallas")
 
 
@@ -86,6 +86,17 @@ class EngineOptions:
         (None = jax default, or one of ``"allow"`` / ``"log"`` /
         ``"disallow"``); ``"disallow"`` turns any unaudited implicit
         device->host readback inside the engines into a hard fault.
+    push_threshold : frontier-fraction cutoff for ``engine="auto"``: route
+        to the vertex-granular push engine when
+        `engine.push.estimate_frontier_fraction` estimates fewer than this
+        fraction of vertices start pending, else to the block sweep. 0
+        never routes to push, 1 always does (when the semiring supports it).
+    beta : push engine only — per-vertex threshold exponent, ``eps_vec =
+        eps * outdeg**(1 - beta)`` (sum semirings; 1.0 = the sweep engines'
+        uniform eps, < 1 = InstantGNN-style degree-normalized early stop).
+    buckets : push engine, pallas backend only — priority buckets per
+        round (bucket 0 = best priority settles first: delta-stepping for
+        min_plus, largest-residual-first for sums).
     """
 
     x_init: Optional[np.ndarray] = None
@@ -99,6 +110,9 @@ class EngineOptions:
     mesh: Any = None
     axis: str = "data"
     transfer_guard: Optional[str] = None
+    push_threshold: float = 0.05
+    beta: float = 1.0
+    buckets: int = 4
 
 
 def validate_options(
@@ -148,21 +162,49 @@ def validate_options(
             f"transfer_guard must be None, 'allow', 'log' or 'disallow', "
             f"got {o.transfer_guard!r}"
         )
+    if not 0.0 <= o.push_threshold <= 1.0:
+        raise EngineOptionsError(
+            f"push_threshold is a frontier fraction in [0, 1], "
+            f"got {o.push_threshold}"
+        )
+    if not 0.0 <= o.beta <= 1.0:
+        raise EngineOptionsError(
+            f"beta (push threshold exponent) must be in [0, 1], got {o.beta}"
+        )
+    if o.buckets < 1:
+        raise EngineOptionsError(f"buckets must be >= 1, got {o.buckets}")
     if o.backend == "pallas":
-        if engine != "async_block":
+        if engine not in ("async_block", "push"):
             raise EngineUnsupportedError(
-                f"backend='pallas' runs the fused block-GS sweep and is an "
-                f"engine='async_block' path; engine={engine!r} has no kernel"
+                f"backend='pallas' runs the fused block-GS sweep "
+                f"(engine='async_block') or the bucketed residual-push "
+                f"scatter (engine='push'); engine={engine!r} has no kernel"
             )
         if o.inner != 1:
             raise EngineOptionsError(
                 "backend='pallas' runs the fused sweep; inner must be 1"
             )
-    elif o.sweeps_per_call != 1 or o.frontier is not None:
+    elif engine != "push" and (o.sweeps_per_call != 1 or o.frontier is not None):
         raise EngineOptionsError(
             "sweeps_per_call/frontier amortize kernel launches and DMAs — "
             "pallas-backend knobs; backend='jax' supports neither"
         )
+    if engine == "push":
+        if o.sweeps_per_call != 1 or o.frontier is not None:
+            raise EngineOptionsError(
+                "engine='push' schedules its own per-round frontier; "
+                "sweeps_per_call/frontier are sweep-engine knobs"
+            )
+        if o.inner != 1:
+            raise EngineOptionsError(
+                "engine='push' settles one vertex at a time; inner is a "
+                "block-engine knob"
+            )
+        if o.extrapolate_every:
+            raise EngineUnsupportedError(
+                "engine='push' is itself the sparse acceleration; Aitken "
+                "extrapolation applies to the dense sweep engines only"
+            )
     if engine == "sync" and o.inner != 1:
         raise EngineOptionsError(
             "engine='sync' runs whole-graph Jacobi rounds; inner is a "
@@ -199,8 +241,13 @@ def solve(
     """Converge ``algo`` with the chosen engine — the single entry path.
 
     ``engine``: ``"sync"`` (Jacobi rounds, paper Eq. 1), ``"async_block"``
-    (block Gauss–Seidel, the TPU adaptation of Eq. 2), or ``"distributed"``
-    (shard_map supersteps: synchronous across shards, Gauss–Seidel within).
+    (block Gauss–Seidel, the TPU adaptation of Eq. 2), ``"distributed"``
+    (shard_map supersteps: synchronous across shards, Gauss–Seidel within),
+    ``"push"`` (vertex-granular residual push — the ultra-sparse regime),
+    or ``"auto"`` (the frontier-size router: estimate the initial pending
+    fraction via `engine.push.estimate_frontier_fraction` and pick
+    ``"push"`` below ``options.push_threshold``, ``"async_block"`` above —
+    or whenever the semiring has no push formulation).
 
     ``options`` is an :class:`EngineOptions`; keyword ``overrides`` are
     applied on top (``solve(algo, "async_block", bs=64)`` is shorthand for
@@ -219,15 +266,36 @@ def solve(
                 f"unknown EngineOptions field(s) {bad}; valid fields: "
                 f"{[f.name for f in dataclasses.fields(o)]}"
             ) from None
+    if engine == "auto":
+        # the frontier-size router — resolved before validation so the
+        # chosen engine's constraints (and only those) apply. Sweep-only
+        # knobs are dropped when push wins: the router's contract is "same
+        # answer, work proportional to the touched neighborhood", and a
+        # caller-seeded frontier/sweep batch has no push meaning.
+        from repro.engine import push as _push
+
+        try:
+            frac = _push.estimate_frontier_fraction(algo, o.x_init)
+            use_push = frac < o.push_threshold
+        except NotImplementedError:
+            use_push = False
+        if use_push:
+            engine = "push"
+            o = dataclasses.replace(
+                o, sweeps_per_call=1, frontier=None, extrapolate_every=0,
+            )
+        else:
+            engine = "async_block"
     validate_options(engine, o, algo)
     # lazy imports: the engine modules import this module for the error
     # family and the shims, so the dispatch edge must not exist at import time
-    from repro.engine import async_block, distributed, sync
+    from repro.engine import async_block, distributed, push, sync
 
     impl = {
         "sync": sync._solve,
         "async_block": async_block._solve,
         "distributed": distributed._solve,
+        "push": push._solve,
     }[engine]
     if o.transfer_guard is not None:
         import jax

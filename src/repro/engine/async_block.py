@@ -410,9 +410,12 @@ class AsyncBlockSession:
             # own update equation, in which case its block never *changes*
             # and would never re-mark dependents — the newcomer's frontier
             # must start at the first vertices whose equations the injection
-            # invalidates, exactly the out-neighbors of the support.
-            touched = support.copy()
-            touched[self.algo.dst[support[self.algo.src]]] = True
+            # invalidates, exactly the depth-1 out-closure of the support.
+            from repro.graphs.delta import out_closure
+
+            touched = out_closure(
+                self.algo.src, self.algo.dst, support, self.n, depth=1
+            )
             self.dirty = or_dirty_blocks(self.dirty, touched, self.n, self.bs)
 
     def run_batch(self, max_iters: int) -> BatchReport:

@@ -53,6 +53,12 @@ class RunResult:
     # sweeps_per_call>1)): fraction of row-blocks actually updated per sweep
     # — the frontier-skipping win (1.0 = full sweep, 0.0 = everything clean)
     active_block_fraction: Optional[np.ndarray] = None  # f32[rounds]
+    # push-engine runs only (engine="push"): work accounting — "pushed"
+    # (vertex settles, summed over rounds), "edges" (scatter messages),
+    # "touched" / "touched_fraction" (distinct vertices ever active), and
+    # "rounds". The sparse-delta benchmark compares these against the sweep
+    # engines' rounds * n swept vertices.
+    push_stats: Optional[dict] = None
 
     @property
     def d(self) -> int:

@@ -38,12 +38,13 @@ programs a cold run executes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.graphs.delta import out_closure
 from repro.graphs.graph import Graph
 
 # Aitken period for the linear delta systems: frequent enough to matter on
@@ -82,7 +83,7 @@ def instance_edge_diff(old: AlgoInstance, new: AlgoInstance) -> EdgeDiff:
         )
     n = max(old.n, new.n)
 
-    def eff(algo: AlgoInstance):
+    def eff(algo: AlgoInstance) -> tuple[np.ndarray, np.ndarray]:
         key = algo.src.astype(np.int64) * n + algo.dst
         uniq, inv = np.unique(key, return_inverse=True)
         if algo.semiring.reduce == "min":
@@ -107,7 +108,7 @@ def instance_edge_diff(old: AlgoInstance, new: AlgoInstance) -> EdgeDiff:
     else:
         tightened, loosened = common[dw > 0], common[dw < 0]
 
-    def dsts(keys):
+    def dsts(keys: np.ndarray) -> np.ndarray:
         return (keys % n).astype(np.int32)
 
     return EdgeDiff(dsts(added), dsts(removed), dsts(tightened), dsts(loosened))
@@ -171,8 +172,9 @@ def affected_region(algo: AlgoInstance, seeds: np.ndarray) -> np.ndarray:
     return reach
 
 
-def _dispatch(engine: str, algo: AlgoInstance, *, x_init=None,
-              extrapolate_every: int = 0, **kw) -> RunResult:
+def _dispatch(engine: str, algo: AlgoInstance, *,
+              x_init: Optional[np.ndarray] = None,
+              extrapolate_every: int = 0, **kw: Any) -> RunResult:
     # the engine string table IS solve()'s dispatch now: one validation
     # pass, one set of error messages, for direct and incremental runs alike
     from repro.engine.api import solve
@@ -189,7 +191,7 @@ def run_incremental(
     engine: str = "async_block",
     extrapolate_every: Optional[int] = None,
     rank: Optional[np.ndarray] = None,
-    **engine_kw,
+    **engine_kw: Any,
 ) -> RunResult:
     """Converge ``algo_new`` warm-started from ``prior`` (converged on
     ``algo_old``); both instances must come from the same constructor in the
@@ -241,7 +243,9 @@ def run_incremental(
         and "frontier" not in engine_kw
     )
 
-    def _run_relabeled(algo, x_init):
+    def _run_relabeled(
+        algo: AlgoInstance, x_init: Optional[np.ndarray]
+    ) -> RunResult:
         """Run `algo` under `rank` (or directly), returning id-space x."""
         kw = dict(run_kw)
         if rank is None:
@@ -259,9 +263,12 @@ def run_incremental(
     if algo_new.semiring.reduce == "sum":
         if extrapolate_every is None:
             # Aitken needs per-sweep host control; the sweep-batched driver
-            # only syncs per batch, so it runs unaccelerated
+            # only syncs per batch, so it runs unaccelerated — and the push
+            # engine is itself the sparse acceleration ("auto" drops the
+            # period in solve() if and when it routes to push)
             extrapolate_every = (
-                0 if int(engine_kw.get("sweeps_per_call", 1)) > 1
+                0 if (engine == "push"
+                      or int(engine_kw.get("sweeps_per_call", 1)) > 1)
                 else DEFAULT_EXTRAPOLATE_EVERY
             )
         run_kw = dict(engine_kw, extrapolate_every=extrapolate_every)
@@ -300,10 +307,12 @@ def run_incremental(
     if seed_frontier:
         # every warm block outside this set is the old fixpoint fed unchanged
         # in-edges, so its recompute is a bitwise no-op until a neighbor moves
-        verts = np.zeros(algo_new.n, bool)
-        for dsts in (diff.added_dst, diff.removed_dst,
-                     diff.tightened_dst, diff.loosened_dst):
-            verts[dsts] = True
+        verts = out_closure(
+            algo_new.src, algo_new.dst,
+            np.concatenate([diff.added_dst, diff.removed_dst,
+                            diff.tightened_dst, diff.loosened_dst]),
+            algo_new.n, depth=0,
+        )
         verts[algo_old.n:] = True  # appended vertices start at x0
         if region is not None:
             verts |= region

@@ -34,6 +34,39 @@ _EMPTY_I = np.empty(0, np.int32)
 _EMPTY_F = np.empty(0, np.float32)
 
 
+def out_closure(
+    src: np.ndarray, dst: np.ndarray, seeds: np.ndarray, n: int,
+    depth: int = 1,
+) -> np.ndarray:
+    """bool[n] — ``seeds`` plus every vertex within ``depth`` out-edge hops.
+
+    THE out-neighborhood closure helper: the megakernel frontier seeding
+    (`engine.async_block.AsyncBlockSession.swap_in`,
+    `engine.incremental.run_incremental`) and the push-routing estimate
+    (`serving.server`) all need "the vertices whose update equations a
+    state/graph change can invalidate", which is the change's support plus
+    its out-neighbors — previously re-derived ad hoc at each site.
+
+    ``seeds`` is either a ``bool[n]`` mask or an integer id array;
+    ``depth=0`` returns just the seed set as a mask. Vectorized: each hop is
+    one boolean gather/scatter over the edge arrays.
+    """
+    mask = np.zeros(n, bool)
+    seeds = np.asarray(seeds)
+    if seeds.dtype == bool:
+        if seeds.shape != (n,):
+            raise ValueError(f"bool seed mask must be (n,) = ({n},), "
+                             f"got {seeds.shape}")
+        mask |= seeds
+    elif len(seeds):
+        mask[seeds.astype(np.int64)] = True
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    for _ in range(depth):
+        mask[dst[mask[src]]] = True
+    return mask
+
+
 @dataclasses.dataclass
 class GraphDelta:
     """One batch of graph updates: ``apply`` produces the mutated graph.
@@ -75,17 +108,34 @@ class GraphDelta:
         """Total number of edge updates in the batch."""
         return len(self.add_src) + len(self.del_src) + len(self.rew_src)
 
-    def touched_vertices(self) -> np.ndarray:
+    def touched_vertices(
+        self, g: Optional[Graph] = None, *, closure: int = 0
+    ) -> np.ndarray:
         """Sorted unique endpoints of every mutated edge (new-id space) —
         the vertex set whose update equations this delta can directly
         invalidate. The serving layer's cache invalidation and frontier
         seeding both start from this set's blocks; appended vertices
         without edges are deliberately absent (nothing can have depended
-        on them)."""
-        return np.unique(np.concatenate([
+        on them).
+
+        ``closure > 0`` widens the set by that many out-edge hops of ``g``
+        (the **post-apply** graph — the inserted edges must be walkable):
+        the depth-1 set is every vertex a warm restart can perturb in its
+        first round, which is what the push router sizes its frontier
+        estimate with."""
+        verts = np.unique(np.concatenate([
             self.add_src, self.add_dst, self.del_src, self.del_dst,
             self.rew_src, self.rew_dst,
         ]).astype(np.int64))
+        if closure == 0:
+            return verts
+        if g is None:
+            raise ValueError(
+                "touched_vertices(closure > 0) walks out-edges and needs "
+                "the post-apply graph: pass g = delta.apply(old_graph)"
+            )
+        mask = out_closure(g.src, g.dst, verts, g.n, depth=closure)
+        return np.nonzero(mask)[0].astype(np.int64)
 
     def apply(self, g: Graph) -> Graph:
         """Return the mutated graph; ``g`` is left untouched."""

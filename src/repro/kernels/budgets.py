@@ -61,6 +61,24 @@ KERNEL_BUDGETS: dict[str, KernelBudget] = {
               "DMA), old/acc blocks, the (1, d) delta row; SMEM holds the "
               "nb dirty flags + done bit",
     ),
+    "push_scatter_pallas": KernelBudget(
+        # measured at the widest point below: ~1.1 KiB VMEM, 4 KiB SMEM —
+        # the push kernel streams (1, d) rows, so VMEM is independent of n,
+        # m, buckets, and cap
+        vmem_limit_bytes=64 * KiB,
+        smem_limit_bytes=8 * KiB,
+        points=(
+            # serving default: 64 query columns, hub-chunking at ecap=256
+            {"ecap": 256, "d": 64, "buckets": 8, "cap": 512, "n": 4096},
+            # delta absorption: few columns, small rounds
+            {"ecap": 128, "d": 8, "buckets": 4, "cap": 64, "n": 1024},
+            # scalar delta-stepping SSSP on a big graph, wide edge chunks
+            {"ecap": 512, "d": 1, "buckets": 16, "cap": 1024, "n": 65536},
+        ),
+        notes="scratch holds four (1, d) residual/state rows + two (1, 1) "
+              "work counters; SMEM holds the two (ecap,) edge-chunk "
+              "buffers (neighbor ids + weights)",
+    ),
     "bsr_spmm_pallas": KernelBudget(
         # measured: ~0.38 MiB (plus_times), ~0.64 MiB (min family w/ temp)
         vmem_limit_bytes=2 * MiB,

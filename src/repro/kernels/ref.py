@@ -22,6 +22,59 @@ import numpy as np
 from repro.kernels.semirings import ACC_IDENTITY, DELTA_METRIC, delta_cols
 
 
+def ref_push_round(
+    order, indptr, nbrs, ew, p, r, semiring: str = "plus_times"
+):
+    """Sequential residual push over ``order`` — the `push_scatter_pallas`
+    oracle. Each vertex u folds its pending residual into its settled state,
+    empties the residual row, then scatters one semiring message per
+    out-edge onto its neighbors' residual rows; vertex u+1 sees every
+    scatter of vertices <= u (the kernel's Gauss–Seidel freshness).
+
+    Returns ``(p, r, pushed, edges)`` with fresh arrays (inputs untouched).
+    All arithmetic stays f32, in the kernel's exact order, so lattice
+    semirings compare bitwise and plus_times to accumulation-order noise.
+    """
+    indptr = np.asarray(indptr)
+    nbrs = np.asarray(nbrs)
+    ew = np.asarray(ew, np.float32)
+    p = np.array(p, np.float32, copy=True)
+    r = np.array(r, np.float32, copy=True)
+    ident = np.float32(ACC_IDENTITY[semiring])
+    pushed = 0
+    edges = 0
+    for u in np.asarray(order):
+        if u < 0:
+            continue
+        if semiring == "plus_times":
+            push = r[u].copy()
+            p[u] = p[u] + push
+        elif semiring == "min_plus":
+            push = np.minimum(p[u], r[u])
+            p[u] = push
+        elif semiring in ("max_min", "max_times"):
+            push = np.maximum(p[u], r[u])
+            p[u] = push
+        else:
+            raise ValueError(semiring)
+        r[u] = ident  # before the scatter: self-loops land on the empty row
+        for t in range(int(indptr[u]), int(indptr[u + 1])):
+            v = nbrs[t]
+            w = ew[t]
+            if semiring == "plus_times":
+                r[v] = r[v] + w * push
+            elif semiring == "min_plus":
+                with np.errstate(over="ignore"):
+                    r[v] = np.minimum(r[v], push + w)
+            elif semiring == "max_min":
+                r[v] = np.maximum(r[v], np.minimum(push, w))
+            else:
+                r[v] = np.maximum(r[v], push * w)
+        pushed += 1
+        edges += int(indptr[u + 1] - indptr[u])
+    return p, r, pushed, edges
+
+
 def _tile_op(semiring: str, tile: np.ndarray, xs: np.ndarray) -> np.ndarray:
     """One tile's contribution: (bs, bs) tile (x) (bs, d) source block."""
     if semiring == "plus_times":

@@ -49,6 +49,29 @@ DELTA_METRIC: dict[str, str] = {
 }
 
 
+def pending_cols(semiring: str, p, r, xp, keepdims: bool = False):
+    """Per-column pending-work metric of a push-engine ``(p, r)`` state —
+    THE definition, shared by the push round driver (`engine.push`, xp=jnp),
+    its vectorized jax backend, and the numpy oracle (`kernels.ref`, xp=np).
+
+    For the sum semiring the residual *is* the distance still to be folded
+    in, so the metric is its per-column max-|r| — the same linf quantity the
+    sweep engines threshold against eps. For the lattice semirings ``r``
+    holds the best pending candidate; a row is pending when that candidate
+    beats ``p`` under the combine, and the metric is the per-column count of
+    such rows (the same absolute "changed" signal as `DELTA_METRIC`).
+    """
+    if semiring == "plus_times":
+        return xp.max(xp.abs(r), axis=0, keepdims=keepdims)
+    if semiring == "min_plus":
+        moved = xp.minimum(p, r) != p
+    elif semiring in ("max_min", "max_times"):
+        moved = xp.maximum(p, r) != p
+    else:
+        raise ValueError(semiring)
+    return xp.sum(moved.astype(xp.float32), axis=0, keepdims=keepdims)
+
+
 def delta_cols(res_kind: str, new, old, xp, keepdims: bool = False):
     """Per-column convergence metric over the row axis — THE definition.
 

@@ -172,6 +172,14 @@ class GraphServer:
         :meth:`step` tick (None = jax default, or ``"allow"`` / ``"log"`` /
         ``"disallow"``); with ``"disallow"`` any unaudited readback inside
         the serving loop faults instead of silently syncing.
+    push_threshold : frontier-fraction cutoff for vertex-granular delta
+        absorption (0 = off). When :meth:`apply_delta` lands a warm-mode
+        delta whose depth-1 out-closure (`GraphDelta.touched_vertices`
+        with ``closure=1``) covers less than this fraction of the tenant's
+        vertices, each in-flight column is resolved to its new fixpoint by
+        the residual push engine (``solve(engine="push")``) during the
+        rebuild — work proportional to the touched neighborhood — instead
+        of re-sweeping ``bs``-blocks next tick.
     """
 
     def __init__(
@@ -183,6 +191,7 @@ class GraphServer:
         refill: str = "continuous", delta_mode: str = "warm",
         max_rounds_per_query: int = 2000,
         transfer_guard: Optional[str] = None,
+        push_threshold: float = 0.0,
     ) -> None:
         if refill not in ("continuous", "static"):
             raise ValueError(f"unknown refill mode {refill!r}")
@@ -190,6 +199,11 @@ class GraphServer:
             raise ValueError(
                 f"transfer_guard must be None, 'allow', 'log' or 'disallow', "
                 f"got {transfer_guard!r}"
+            )
+        if not 0.0 <= push_threshold <= 1.0:
+            raise ValueError(
+                f"push_threshold is a frontier fraction in [0, 1], "
+                f"got {push_threshold}"
             )
         if delta_mode not in ("warm", "restart"):
             raise ValueError(f"unknown delta_mode {delta_mode!r}")
@@ -226,6 +240,7 @@ class GraphServer:
         self.delta_mode = delta_mode
         self.max_rounds_per_query = max_rounds_per_query
         self.transfer_guard = transfer_guard
+        self.push_threshold = push_threshold
         self.scheduler = Scheduler(policy)
         self.cache = ResultCache(max_bytes=cache_max_bytes) if cache else None
         self.stats = ServerStats(slots=slots)
@@ -397,7 +412,7 @@ class GraphServer:
         self.stats.deltas_applied += 1
         for fam in self._families.values():
             if fam.tenant == tenant:
-                self._rebuild_family(fam)
+                self._rebuild_family(fam, delta=delta)
 
     # ------------------------------------------------------------ internals
 
@@ -568,7 +583,9 @@ class GraphServer:
         fam.tickets[j] = None
         fam.queries[j] = None
 
-    def _rebuild_family(self, fam: _Family) -> None:
+    def _rebuild_family(
+        self, fam: _Family, delta: Optional[GraphDelta] = None
+    ) -> None:
         probe_old = fam.probe
         probe_new = remake(probe_old, self._tenant(fam.tenant).g)
         occupied = [(j, t, fam.queries[j]) for j, t in fam.occupied()]
@@ -585,6 +602,17 @@ class GraphServer:
             if diff.loosening:
                 seeds = np.concatenate([diff.removed_dst, diff.loosened_dst])
                 region = affected_region(probe_new, seeds)
+        # vertex-granular absorption: a sparse delta's depth-1 out-closure
+        # bounds the first warm round's frontier, so when it is a sliver of
+        # the graph the push engine resolves each in-flight column at
+        # touched-neighborhood cost right now, and the next family batch's
+        # sweep is just the verification round
+        absorb = False
+        if (self.push_threshold > 0.0 and delta is not None
+                and self.delta_mode == "warm" and occupied):
+            g_new = self._tenant(fam.tenant).g
+            closure = delta.touched_vertices(g_new, closure=1)
+            absorb = len(closure) / max(g_new.n, 1) < self.push_threshold
         for j, t, q_old in occupied:
             q_new = remake(q_old, self._tenant(fam.tenant).g)
             self._install(new, j, t, q_new)
@@ -600,10 +628,31 @@ class GraphServer:
                 col = jnp.where(jnp.asarray(q_new.fixed[:, 0]), base, col)
                 if region is not None:
                     col = jnp.where(jnp.asarray(region), base, col)
+                rounds = t.rounds
+                if absorb:
+                    from repro.engine.api import solve
+
+                    col_host = jax.device_get(
+                        col
+                    )  # repro: allow-host-sync(push absorption reads one warm column per delta)
+                    try:
+                        res = solve(
+                            q_new, engine="push", x_init=col_host,
+                            backend="jax",
+                            max_iters=self.max_rounds_per_query,
+                        )
+                    except NotImplementedError:
+                        pass   # semiring with no push form: plain warm carry
+                    else:
+                        col = jnp.asarray(
+                            np.asarray(res.x, np.float32).reshape(-1)
+                        )
+                        rounds += res.rounds
                 new.session.load_state_column(j, col)
                 # the new session's accounting starts at 0; carry the
-                # rounds the warm continuation already consumed
-                new.session.set_col_rounds(j, t.rounds)
+                # rounds the warm continuation (and any push absorption)
+                # already consumed
+                new.session.set_col_rounds(j, rounds)
             else:
                 t.rounds = 0   # restart: solo-exact counts on the new graph
         fam.probe = probe_new

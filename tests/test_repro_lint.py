@@ -240,6 +240,27 @@ def test_pallas_clean_on_repo_kernels():
     assert pallas_resources.run(ROOT) == []
 
 
+def test_push_scatter_budget_entry_is_live():
+    """The push kernel's budget is a live contract, not decoration: the real
+    `push_scatter.py` site resolves at every declared point and passes under
+    its declared budget — and an artificially tiny budget trips PL001, so
+    the checker is actually evaluating this kernel's footprint."""
+    import dataclasses
+
+    from repro.kernels.budgets import KERNEL_BUDGETS
+
+    path = os.path.join(ROOT, "src", "repro", "kernels", "push_scatter.py")
+    sites = pallas_resources.collect_sites([path], os.path.join(ROOT, "src"))
+    site = next(s for s in sites if s.name == "push_scatter_pallas")
+    real = KERNEL_BUDGETS["push_scatter_pallas"]
+    assert pallas_resources.check_sites(
+        [site], {"push_scatter_pallas": real}) == []
+    tiny = dataclasses.replace(real, vmem_limit_bytes=16, smem_limit_bytes=16)
+    rules = sorted({f.rule for f in pallas_resources.check_sites(
+        [site], {"push_scatter_pallas": tiny})})
+    assert rules == ["PL001"]
+
+
 def test_repo_kernel_footprints_fit_declared_budgets_with_headroom():
     """The README table inputs: every declared point resolves and lands
     under its budget (check_sites passing is the gate; this pins the
