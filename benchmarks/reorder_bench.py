@@ -1,0 +1,216 @@
+"""Online amortized reordering on a sustained delta stream.
+
+The tentpole claim (ROADMAP item 4): a GoGraph order *decays* as deltas
+land — extend-only maintenance (`extend_rank`) places arriving vertices
+well but never repairs existing ones, so a stream that rewires the graph
+drags M down and rounds back up — and the online path (incremental
+`MetricTracker` -> `decayed_regions` -> `regional_rerank`) recovers most
+of the lost rounds at O(|region| * deg) cost, without ever recomputing the
+full order.
+
+Adversarial-but-realistic stream: a directed path under a shuffled id
+assignment (the chain is the best order; positive-edge fraction 1.0), hit
+by deltas that reverse contiguous chain segments in place (the graph stays
+a single path, but the old order traverses each reversed segment backward:
+one round per hop for a block Gauss-Seidel sweep) plus occasional appended
+tail vertices. Decay is region-local by construction, which is exactly the
+regime regional re-ranking is for.
+
+Three orders are maintained across the same stream and measured with the
+same engine (``solve(engine="async_block", rank=...)``, SSSP from the chain
+head, so every round count is an end-to-end number through the packed
+entry path):
+
+* ``fresh``   — full `gograph_order` recompute after every delta (the
+  O(m log m)-per-delta upper bound the online path amortizes away);
+* ``decayed`` — extend-only maintenance (the do-nothing lower bound);
+* ``online``  — extend + tracker-triggered regional re-ranks.
+
+Gated in ``BENCH_reorder.json`` (CI uploads and asserts, fast mode
+included): ``decay_ratio = rounds_decayed / rounds_fresh >= 1.2`` (the
+stream really does cost rounds) and ``recovery = (rounds_decayed -
+rounds_online) / (rounds_decayed - rounds_fresh) >= 0.8`` (the online path
+recovers >= 80% of the gap). The per-delta M-fraction curve for all three
+orders rides along (the README plot), as does a GraphServer pass over the
+same stream showing the serving loop's ``reorders`` telemetry and resolved
+rounds with reordering on vs off.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.gograph import RankMaintainer, gograph_order
+from repro.core.metric import MetricTracker, metric_m
+from repro.engine.api import solve
+from repro.engine.algorithms import get_algorithm
+from repro.graphs.delta import GraphDelta
+from repro.graphs.graph import Graph
+from repro.serving.server import GraphServer
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# bs == inner: within a sweep each block's Jacobi re-iterations reach the
+# in-block fixpoint, so rounds are governed purely by *backward block
+# crossings* — the quantity the processing order controls (intra-block
+# edges are fresh either way; see `core.metric.block_fresh_fraction`)
+BS = 8
+INNER = 8
+THRESHOLD = 0.9        # regional re-rank trigger (M fraction)
+REGIONS = 16
+N = 512 if common.FAST else 2048
+N_DELTAS = 4 if common.FAST else 8
+SEG = N // (6 if common.FAST else 12)   # reversed-segment length (hops)
+
+
+def _shuffled_path(n: int, seed: int = 11):
+    """Directed unit-weight path over a shuffled id assignment."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n).astype(np.int64)
+    g = Graph(n=n, src=perm[:-1].copy(), dst=perm[1:].copy(),
+              w=np.ones(n - 1, np.float32))
+    rank = np.empty(n, np.int64)
+    rank[perm] = np.arange(n)
+    return g, rank, perm.tolist()
+
+
+def _reverse_segment(chain: list, lo: int, hi: int) -> GraphDelta:
+    """Reverse chain positions [lo, hi] *in place* (the graph stays one
+    path): delete the old sub-chain through the segment, add the re-linked
+    one with the segment traversed backward. Mutates ``chain``."""
+    seg = np.asarray(chain[lo - 1:hi + 2], np.int64)  # with both boundaries
+    new = np.concatenate([seg[:1], seg[1:-1][::-1], seg[-1:]])
+    chain[lo:hi + 1] = chain[lo:hi + 1][::-1]
+    return GraphDelta(
+        del_src=seg[:-1].copy(), del_dst=seg[1:].copy(),
+        add_src=new[:-1].copy(), add_dst=new[1:].copy(),
+        add_w=np.ones(len(seg) - 1, np.float32),
+    )
+
+
+def _extend_tail(chain: list, n: int, k: int) -> GraphDelta:
+    """Append k vertices continuing the path at the tail. Mutates chain."""
+    ids = np.arange(n, n + k, dtype=np.int64)
+    src = np.concatenate([[chain[-1]], ids[:-1]])
+    chain.extend(ids.tolist())
+    return GraphDelta(n_add=k, add_src=src, add_dst=ids,
+                      add_w=np.ones(k, np.float32))
+
+
+def _stream(seed: int = 23):
+    """The delta stream: N_DELTAS segment reversals over distinct chunks of
+    the chain, a small tail extension after every second one."""
+    g, rank, chain = _shuffled_path(N, seed)
+    rng = np.random.default_rng(seed)
+    deltas = []
+    chunk = (N - 2) // N_DELTAS
+    for i in range(N_DELTAS):
+        lo = 1 + i * chunk + int(rng.integers(0, max(1, chunk - SEG - 2)))
+        deltas.append(("rev", _reverse_segment(chain, lo, lo + SEG)))
+        if i % 2 == 1:
+            deltas.append(("ext", _extend_tail(chain, len(chain), 4)))
+    return g, rank, chain, deltas
+
+
+def _rounds(g: Graph, rank: np.ndarray, source: int) -> int:
+    algo = get_algorithm("sssp", g, source=source)
+    return solve(algo, engine="async_block", bs=BS, inner=INNER,
+                 rank=rank).rounds
+
+
+def run(out_dir: str):
+    g0, rank0, chain, deltas = _stream()
+    head = chain[0]
+
+    # three order-maintenance policies over the SAME stream
+    g = g0
+    decay = RankMaintainer(rank0)
+    online = RankMaintainer(rank0)
+    tracker = MetricTracker(g0, rank0, regions=REGIONS)
+    rank_online = rank0
+    curve = []
+    reranks = 0
+    for kind, d in deltas:
+        g = d.apply(g)
+        rank_decay = decay.extend(g)
+        rank_online = online.extend(g)
+        tracker.apply_delta(d, rank_new=rank_online if d.n_add else None)
+        assert tracker.M == metric_m(g, rank_online), "tracker drift"
+        decayed = tracker.decayed_regions(THRESHOLD)
+        if len(decayed):
+            from repro.core.gograph import regional_rerank
+
+            members = tracker.region_members(decayed)
+            rank_online = regional_rerank(g, rank_online, members)
+            tracker.rebase(g, rank_online)
+            online = RankMaintainer(rank_online)
+            reranks += 1
+        rank_fresh = gograph_order(g)
+        m = max(1, g.m)
+        curve.append({
+            "delta": kind,
+            "m_frac_fresh": metric_m(g, rank_fresh) / m,
+            "m_frac_online": tracker.m_frac,
+            "m_frac_decayed": metric_m(g, rank_decay) / m,
+        })
+
+    (r_fresh, us_fresh) = common.timed(_rounds, g, rank_fresh, head)
+    (r_online, us_online) = common.timed(_rounds, g, rank_online, head)
+    (r_decay, us_decay) = common.timed(_rounds, g, rank_decay, head)
+    decay_ratio = r_decay / max(1, r_fresh)
+    recovery = (r_decay - r_online) / max(1, r_decay - r_fresh)
+
+    # the serving loop over the same stream: reorder_threshold on vs off,
+    # the post-stream head query's resolved rounds are the payoff
+    def serve(threshold: float):
+        srv = GraphServer(g0, slots=2, bs=BS, inner=INNER,
+                          rounds_per_batch=4, transfer_guard="disallow",
+                          rank=rank0, reorder_threshold=threshold,
+                          reorder_regions=REGIONS)
+        for _, d in deltas:
+            srv.apply_delta(d)
+        t = srv.submit("sssp", {"source": head})
+        srv.run()
+        assert t.converged
+        return t, srv.stats.summary()
+
+    t_off, s_off = serve(0.0)
+    t_on, s_on = serve(THRESHOLD)
+    assert np.array_equal(t_on.result, t_off.result), \
+        "reordering changed a resolved state"
+
+    payload = {
+        "config": {
+            "n": int(g.n), "m": int(g.m), "bs": BS, "deltas": len(deltas),
+            "segment": SEG, "threshold": THRESHOLD, "regions": REGIONS,
+            "fast": common.FAST,
+        },
+        "rounds": {"fresh": r_fresh, "online": r_online, "decayed": r_decay},
+        "decay_ratio": decay_ratio,
+        "recovery": recovery,
+        "reranks": reranks,
+        "curve": curve,
+        "serving": {
+            "rounds_reorder_off": t_off.rounds,
+            "rounds_reorder_on": t_on.rounds,
+            "reorders": s_on["reorders"],
+            "reorders_disabled": s_on["reorders_disabled"],
+        },
+    }
+    common.save_json(out_dir, "reorder_bench", payload)
+    with open(os.path.join(_REPO_ROOT, "BENCH_reorder.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+    return [
+        ("reorder/fresh", us_fresh, f"rounds={r_fresh}"),
+        ("reorder/online", us_online,
+         f"rounds={r_online} reranks={reranks} recovery={recovery:.2f}"),
+        ("reorder/decayed", us_decay,
+         f"rounds={r_decay} ratio={decay_ratio:.2f}"),
+        ("reorder/serving", 0.0,
+         f"rounds on/off={t_on.rounds}/{t_off.rounds} "
+         f"reorders={s_on['reorders']}"),
+    ]

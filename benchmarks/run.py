@@ -28,6 +28,7 @@ MODULES = [
     "incremental",            # evolving graphs: warm vs cold serving
     "serving_bench",          # continuous vs static batching (GraphServer)
     "push_bench",             # vertex-granular push vs block sweeps on deltas
+    "reorder_bench",          # online reordering on a sustained delta stream
 ]
 
 

@@ -68,11 +68,18 @@ class _Inserter:
     per gap.
     """
 
-    def __init__(self, n: int):
+    def __init__(self, n: int) -> None:
         self.val = np.full(n, np.nan, dtype=np.float64)
         self.placed: list[int] = []
         self._min = 0.0
         self._max = 0.0
+
+    def grow(self, n_new: int) -> None:
+        """Extend the id universe (appended vertices arrive unplaced)."""
+        if n_new < len(self.val):
+            raise ValueError(f"cannot shrink inserter from {len(self.val)} to {n_new}")
+        pad = np.full(n_new - len(self.val), np.nan, dtype=np.float64)
+        self.val = np.concatenate([self.val, pad])
 
     # -- helpers ---------------------------------------------------------
     def seed_sequence(self, ids: np.ndarray) -> None:
@@ -162,6 +169,31 @@ class _Inserter:
         return new_val
 
 
+def _insert_all(
+    ins: _Inserter, g: Graph, ids: np.ndarray, *, by_degree: bool = True
+) -> None:
+    """Insert ``ids`` into ``ins`` against ``g``'s full (unit-weight)
+    neighborhoods — THE shared insertion loop behind phase 5, `extend_rank`,
+    and `regional_rerank` (previously re-spelled at each site).
+
+    ``by_degree=True`` inserts hubs first (descending degree, stable by id —
+    the HD-phase convention, so later arrivals can position against them);
+    ``by_degree=False`` preserves the given order (BFS-candidate sequences).
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    if not len(ids):
+        return
+    if by_degree:
+        deg = g.degrees()
+        ids = ids[np.argsort(-deg[ids], kind="stable")]
+    csc_indptr, csc_src, _ = g.csc()
+    csr_indptr, csr_dst, _ = g.csr()
+    for v in ids:
+        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]]
+        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]]
+        ins.insert(int(v), inn, np.ones(len(inn)), outn, np.ones(len(outn)))
+
+
 def _community_bfs_order(
     members: np.ndarray,
     indptr: np.ndarray,
@@ -204,7 +236,7 @@ def gograph_order(
     g: Graph,
     config: GoGraphConfig | None = None,
     return_info: bool = False,
-):
+) -> np.ndarray | tuple[np.ndarray, dict]:
     """Run GoGraph; returns rank (rank[v] = ordinal p(v)).
 
     With ``return_info=True`` also returns a dict of phase artifacts used by
@@ -319,23 +351,52 @@ def gograph_order(
     # ---- phase 5: insert high-degree then isolated vertices -------------
     glob = _Inserter(n)
     glob.seed_sequence(core_order_global)
-
-    csc_indptr, csc_src, csc_eid = g.csc()
-    csr_indptr, csr_dst, csr_eid = g.csr()
-    hd_by_deg = hd[np.argsort(-deg[hd], kind="stable")] if len(hd) else hd
-    for v in hd_by_deg:
-        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]]
-        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]]
-        glob.insert(int(v), inn, np.ones(len(inn)), outn, np.ones(len(outn)))
-    for v in np.where(is_iso)[0]:
-        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]]
-        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]]
-        glob.insert(int(v), inn, np.ones(len(inn)), outn, np.ones(len(outn)))
+    _insert_all(glob, g, hd, by_degree=True)
+    _insert_all(glob, g, np.where(is_iso)[0], by_degree=False)
 
     order = np.argsort(glob.val, kind="stable")
     rank = order_to_rank(order)
     info["val"] = glob.val
     return (rank, info) if return_info else rank
+
+
+class RankMaintainer:
+    """Persistent incremental order maintenance for evolving graphs.
+
+    Wraps one `_Inserter` whose float vals survive across delta batches:
+    ``extend_rank`` used to re-seed (an O(n) renormalization) on *every*
+    batch, so a tenant absorbing a delta stream paid O(n) per batch even
+    when only a handful of vertices arrived. The maintainer seeds once and
+    only renormalizes when midpoint bisection exhausts float precision
+    (the `_Inserter` guard), making steady-state extension O(|new| · deg).
+
+    Placed vertices keep their relative order exactly (their vals are only
+    bisected between), so already-packed blocks and served warm states stay
+    aligned. After an arbitrary reorder (e.g. `regional_rerank`) build a
+    fresh maintainer from the new rank.
+    """
+
+    def __init__(self, rank: np.ndarray) -> None:
+        rank = np.asarray(rank)
+        self.n = len(rank)
+        self._ins = _Inserter(self.n)
+        self._ins.seed_sequence(rank_to_order(rank))
+
+    def extend(self, g: Graph) -> np.ndarray:
+        """Place ``g``'s appended vertices (ids >= current n) and return the
+        extended rank over all ``g.n`` vertices. New vertices insert in
+        descending degree order (hubs first, the HD-phase convention)."""
+        if self.n > g.n:
+            raise ValueError(f"maintained rank covers {self.n} vertices, graph has {g.n}")
+        if g.n > self.n:
+            self._ins.grow(g.n)
+            _insert_all(self._ins, g, np.arange(self.n, g.n, dtype=np.int64),
+                        by_degree=True)
+            self.n = g.n
+        return self.rank()
+
+    def rank(self) -> np.ndarray:
+        return order_to_rank(np.argsort(self._ins.val[:self.n], kind="stable"))
 
 
 def extend_rank(g: Graph, rank_old: np.ndarray) -> np.ndarray:
@@ -346,27 +407,58 @@ def extend_rank(g: Graph, rank_old: np.ndarray) -> np.ndarray:
     divide-and-conquer pipeline, each new vertex is placed into the existing
     order at its M-maximizing position via the same ``GetOptVal`` scan
     (`_Inserter.insert`) that phase 5 uses for high-degree vertices —
-    O(deg(v) log deg(v)) per arrival, no global reorder. Placed vertices keep
-    their relative order exactly (their float vals are only bisected
-    between), so already-packed blocks and served warm states stay aligned
-    until the next full reorder.
+    O(deg(v) log deg(v)) per arrival, no global reorder.
 
-    New vertices insert in descending degree order (hubs first, so later
-    arrivals can position against them), matching the HD-phase convention.
-    Returns the extended rank over all ``g.n`` vertices.
+    One-shot convenience over :class:`RankMaintainer` — callers extending
+    repeatedly (the serving loop) should hold a maintainer instead, which
+    amortizes the O(n) seeding this wrapper pays per call.
     """
-    rank_old = np.asarray(rank_old)
-    n_old = len(rank_old)
-    if n_old > g.n:
-        raise ValueError(f"rank_old covers {n_old} vertices, graph has {g.n}")
+    return RankMaintainer(rank_old).extend(g)
+
+
+def regional_rerank(g: Graph, rank: np.ndarray, members: np.ndarray) -> np.ndarray:
+    """Re-run the divide-and-conquer insertion over ``members`` only and
+    splice the result into the global rank.
+
+    Non-members keep their relative order exactly; members are removed and
+    re-inserted at their M-maximizing positions via the same ``GetOptVal``
+    machinery as phase 3 (BFS candidate order over the members' internal
+    undirected edges, seeded at the min in-degree member) with the
+    vectorized `_scan_best_gap` prefix scan. Cross-region edges participate
+    through each member's full neighborhood, so a member can land anywhere
+    in the global order, not just inside its old span.
+
+    This is the online-reordering repair step: when a region's M fraction
+    decays (tracked by `MetricTracker`), re-ranking just that region
+    recovers most of the lost metric at O(|region| · deg) cost instead of
+    the full O(n) pipeline. Returns the new rank over all vertices.
+    """
+    rank = np.asarray(rank, dtype=np.int64)
+    if rank.shape != (g.n,):
+        raise ValueError(f"rank must have shape ({g.n},), got {rank.shape}")
+    members = np.asarray(members, dtype=np.int64)
+    if not len(members):
+        return rank.copy()
+    is_member = np.zeros(g.n, dtype=bool)
+    is_member[members] = True
+    rest = rank_to_order(rank)
+    rest = rest[~is_member[rest]]  # non-members, in current order
     ins = _Inserter(g.n)
-    ins.seed_sequence(rank_to_order(rank_old))
-    csc_indptr, csc_src, _ = g.csc()
-    csr_indptr, csr_dst, _ = g.csr()
-    new_ids = np.arange(n_old, g.n, dtype=np.int64)
-    deg = g.degrees()
-    for v in new_ids[np.argsort(-deg[new_ids], kind="stable")]:
-        inn = csc_src[csc_indptr[v]:csc_indptr[v + 1]]
-        outn = csr_dst[csr_indptr[v]:csr_indptr[v + 1]]
-        ins.insert(int(v), inn, np.ones(len(inn)), outn, np.ones(len(outn)))
+    ins.seed_sequence(rest)
+    sym_indptr, sym_nbrs = part_mod._sym_csr(g)
+    # Seed each BFS component at a *boundary* member (one with a non-member
+    # neighbor), min in-degree among those. Phase 3's plain min-in-degree
+    # seed is right when nothing is placed yet, but here the non-members
+    # are already placed: an interior seed has no placed neighbor, so its
+    # GetOptVal scan degenerates to the tail-append fallback and drags the
+    # whole spliced component away from its cross-region anchors.
+    csum = np.concatenate([[0], np.cumsum(~is_member[sym_nbrs])])
+    ext_nbrs = csum[sym_indptr[1:]] - csum[sym_indptr[:-1]]
+    deg = g.in_degrees().astype(np.int64)
+    prio = deg + (int(deg.max(initial=0)) + 1) * (ext_nbrs == 0)
+    cand = _community_bfs_order(members, sym_indptr, sym_nbrs, prio)
+    _insert_all(ins, g, cand, by_degree=False)
+    # BFS can only miss members with no internal edges; place them by degree
+    missed = members[np.isnan(ins.val[members])]
+    _insert_all(ins, g, missed, by_degree=True)
     return order_to_rank(np.argsort(ins.val, kind="stable"))

@@ -97,6 +97,11 @@ class EngineOptions:
     buckets : push engine, pallas backend only — priority buckets per
         round (bucket 0 = best priority settles first: delta-stepping for
         min_plus, largest-residual-first for sums).
+    rank : optional processing order (``rank[v]`` = ordinal position of v,
+        e.g. a `core.gograph.gograph_order` / `extend_rank` result). The
+        solve runs relabeled — ``x_init`` / ``frontier`` are permuted in and
+        the returned state is permuted back — so callers stay in the
+        instance's id space while the engine sweeps blocks in rank order.
     """
 
     x_init: Optional[np.ndarray] = None
@@ -113,6 +118,7 @@ class EngineOptions:
     push_threshold: float = 0.05
     beta: float = 1.0
     buckets: int = 4
+    rank: Optional[np.ndarray] = None
 
 
 def validate_options(
@@ -173,6 +179,16 @@ def validate_options(
         )
     if o.buckets < 1:
         raise EngineOptionsError(f"buckets must be >= 1, got {o.buckets}")
+    if o.rank is not None:
+        if np.ndim(o.rank) != 1:
+            raise EngineOptionsError(
+                f"rank must be a 1-D permutation of 0..n-1 "
+                f"(rank[v] = processing position), got ndim={np.ndim(o.rank)}"
+            )
+        if algo is not None and len(o.rank) != algo.n:
+            raise EngineOptionsError(
+                f"rank covers {len(o.rank)} vertices, instance has {algo.n}"
+            )
     if o.backend == "pallas":
         if engine not in ("async_block", "push"):
             raise EngineUnsupportedError(
@@ -287,6 +303,25 @@ def solve(
         else:
             engine = "async_block"
     validate_options(engine, o, algo)
+    rank: Optional[np.ndarray] = None
+    if o.rank is not None:
+        # run relabeled: the engines sweep blocks of consecutive ids, so the
+        # order becomes real by renaming vertex v to id rank[v]; the caller's
+        # id-space vectors permute in and the result permutes back out
+        from repro.engine.harness import permute_state
+        from repro.graphs.graph import check_permutation
+
+        rank = np.asarray(o.rank)
+        check_permutation(rank, algo.n)
+        algo = algo.relabel(rank)
+        o = dataclasses.replace(
+            o,
+            rank=None,
+            x_init=None if o.x_init is None
+            else permute_state(np.asarray(o.x_init), rank),
+            frontier=None if o.frontier is None
+            else permute_state(np.asarray(o.frontier), rank),
+        )
     # lazy imports: the engine modules import this module for the error
     # family and the shims, so the dispatch edge must not exist at import time
     from repro.engine import async_block, distributed, push, sync
@@ -305,5 +340,12 @@ def solve(
         # class this sanitizer exists to catch (audited readouts go through
         # jax.device_get, which the guard always permits)
         with jax.transfer_guard_device_to_host(o.transfer_guard):
-            return impl(algo, o)
-    return impl(algo, o)
+            res = impl(algo, o)
+    else:
+        res = impl(algo, o)
+    if rank is not None:
+        x = np.asarray(res.x).reshape(algo.n, -1)[rank]
+        if algo.d == 1:
+            x = x[:, 0]
+        res = dataclasses.replace(res, x=x)
+    return res

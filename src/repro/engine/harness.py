@@ -159,6 +159,33 @@ def swap_in_column_device(
     return _set_query_columns(x, x0, c, fixed, jnp.int32(j), xq, cq, fq)
 
 
+def permute_state(x: np.ndarray, rank: np.ndarray) -> np.ndarray:
+    """Carry a served state across a relabel: vertex v's row moves to
+    ``rank[v]`` — the same transform `AlgoInstance.relabel` applies to x0."""
+    rank = np.asarray(rank)
+    inv = np.empty_like(rank)
+    inv[rank] = np.arange(len(rank))
+    x = np.asarray(x)
+    return x[inv]
+
+
+@jax.jit
+def _gather_rows(x, idx):
+    return x[idx]
+
+
+def gather_rows(x, idx):
+    """Device-resident row gather ``x[idx]`` (jitted, returns a jax array).
+
+    The order-swap primitive: permuting a family's packed state matrix (or
+    one column) between two processing orders is two of these gathers —
+    old-rank -> id space via ``rank_old``, id space -> new-rank via
+    ``order_new`` — and a gather is a bit-copy, so min/max warm states move
+    across orders bitwise without leaving the device (PR 6 residency
+    contract)."""
+    return _gather_rows(x, jnp.asarray(idx))
+
+
 # The value an *untouched* vertex holds at the start of every workload the
 # constructors build: 0 for the additive semiring, the +BIG sentinel for
 # min-reduce (unreached SSSP/BFS/CC), 0 for max-reduce (SSWP width /

@@ -44,8 +44,14 @@ import numpy as np
 
 from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
+from repro.engine.harness import permute_state
 from repro.graphs.delta import out_closure
 from repro.graphs.graph import Graph
+
+__all__ = [
+    "EdgeDiff", "instance_edge_diff", "warm_state", "dense_residual",
+    "affected_region", "run_incremental", "permute_state",
+]
 
 # Aitken period for the linear delta systems: frequent enough to matter on
 # short warm runs, spaced enough that modes re-mix between jumps.
@@ -231,8 +237,6 @@ def run_incremental(
             f"{algo_new.name}/d={algo_new.d}"
         )
     x_warm = warm_state(algo_new, algo_old, prior)
-    if rank is not None:
-        rank = np.asarray(rank)
 
     # seed the megakernel's active frontier from the delta-touched blocks
     # when the caller asked for sweep batching and didn't pin one themselves
@@ -246,19 +250,12 @@ def run_incremental(
     def _run_relabeled(
         algo: AlgoInstance, x_init: Optional[np.ndarray]
     ) -> RunResult:
-        """Run `algo` under `rank` (or directly), returning id-space x."""
-        kw = dict(run_kw)
-        if rank is None:
-            return _dispatch(engine, algo, x_init=x_init, **kw)
-        if kw.get("frontier") is not None:
-            kw["frontier"] = permute_state(kw["frontier"], rank)
-        res = _dispatch(engine, algo.relabel(rank),
-                        x_init=None if x_init is None
-                        else permute_state(x_init, rank), **kw)
-        x = np.asarray(res.x).reshape(algo.n, -1)[rank]
-        if algo.d == 1:
-            x = x[:, 0]
-        return dataclasses.replace(res, x=x)
+        """Run `algo` under `rank` (or directly), returning id-space x.
+
+        All the relabel mechanics — permuting x_init/frontier in and the
+        result back out — live in ``solve(rank=...)`` now; this wrapper only
+        threads the order through."""
+        return _dispatch(engine, algo, x_init=x_init, rank=rank, **run_kw)
 
     if algo_new.semiring.reduce == "sum":
         if extrapolate_every is None:
@@ -318,13 +315,3 @@ def run_incremental(
             verts |= region
         run_kw["frontier"] = verts
     return _run_relabeled(algo_new, x_warm)
-
-
-def permute_state(x: np.ndarray, rank: np.ndarray) -> np.ndarray:
-    """Carry a served state across a relabel: vertex v's row moves to
-    ``rank[v]`` — the same transform `AlgoInstance.relabel` applies to x0."""
-    rank = np.asarray(rank)
-    inv = np.empty_like(rank)
-    inv[rank] = np.arange(len(rank))
-    x = np.asarray(x)
-    return x[inv]

@@ -64,6 +64,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.gograph import RankMaintainer, regional_rerank
+from repro.core.metric import MetricTracker
 from repro.engine import harness
 from repro.engine.algorithms import ALGORITHMS, AlgoInstance, get_algorithm, remake
 from repro.engine.async_block import AsyncBlockSession
@@ -72,7 +74,7 @@ from repro.engine.incremental import (
     instance_edge_diff,
 )
 from repro.graphs.delta import GraphDelta
-from repro.graphs.graph import Graph
+from repro.graphs.graph import Graph, check_permutation, rank_to_order
 from repro.serving.cache import ResultCache
 from repro.serving.scheduler import Scheduler, canon, family_key
 from repro.serving.stats import ServerStats
@@ -108,12 +110,74 @@ class Ticket:
 
 
 @dataclasses.dataclass
+class _ReorderTuner:
+    """Per-tenant rounds-saved measurement behind the online reordering knob.
+
+    The locality-reordering literature (arxiv 2111.12281) shows the payoff of
+    a better order depends on graph structure — some tenants simply cannot
+    win. The tuner compares the mean resolved rounds-per-query over a window
+    before each order swap against the window after it; ``patience``
+    consecutive swaps with no measured gain flip ``enabled`` off, and the
+    server stops re-ranking that tenant (the metric tracker keeps counting,
+    so telemetry still shows the decay it chose to ignore).
+    """
+
+    patience: int
+    window: int = 8
+    min_gain: float = 0.0
+    strikes: int = 0
+    swaps: int = 0
+    enabled: bool = True
+    _recent: list = dataclasses.field(default_factory=list)
+    _before: Optional[float] = None
+    _after: Optional[list] = None
+
+    def record_resolve(self, rounds: int) -> None:
+        self._recent.append(rounds)
+        if len(self._recent) > 4 * self.window:
+            del self._recent[: len(self._recent) // 2]
+        if self._after is not None:
+            self._after.append(rounds)
+            if len(self._after) >= self.window:
+                self._judge()
+
+    def note_swap(self) -> None:
+        self.swaps += 1
+        if self._recent:
+            tail = self._recent[-self.window:]
+            self._before = sum(tail) / len(tail)
+            self._after = []
+        # no resolved history yet: nothing to compare against, skip measuring
+
+    def _judge(self) -> None:
+        assert self._after is not None
+        after = sum(self._after) / len(self._after)
+        if self._before is not None and self._before - after <= self.min_gain:
+            self.strikes += 1
+            if self.strikes >= self.patience:
+                self.enabled = False
+        else:
+            self.strikes = 0
+        self._before, self._after = None, None
+
+
+@dataclasses.dataclass
 class _Tenant:
     """One independently served (and independently evolving) graph."""
 
     name: str
     g: Graph
     graph_version: int = 0
+    # online reordering state (None everywhere = id-order serving, the
+    # pre-PR 9 fast path): rank is the tenant's processing order, order its
+    # inverse (order[p] = vertex at position p), tracker the incremental M
+    # counter, maintainer the persistent extend_rank, tuner the rounds-win
+    # measurement that can disable re-ranking for this tenant
+    rank: Optional[np.ndarray] = None
+    order: Optional[np.ndarray] = None
+    tracker: Optional[MetricTracker] = None
+    maintainer: Optional[RankMaintainer] = None
+    tuner: Optional[_ReorderTuner] = None
 
 
 @dataclasses.dataclass
@@ -180,6 +244,23 @@ class GraphServer:
         the residual push engine (``solve(engine="push")``) during the
         rebuild — work proportional to the touched neighborhood — instead
         of re-sweeping ``bs``-blocks next tick.
+    rank : processing order for the default tenant (``rank[v]`` = position,
+        e.g. a `core.gograph.gograph_order` result). The tenant's sessions
+        pack and sweep relabeled; queries and results stay in id space.
+        ``add_tenant`` takes a per-tenant rank. None = id order, unless
+        ``reorder_threshold > 0`` (which starts from the identity order).
+    reorder_threshold : online reordering trigger (0 = off). Each tenant
+        gets a `core.metric.MetricTracker`; after a delta lands, any rank
+        region whose positive-edge fraction fell below this value (and
+        below its level at the last re-rank) is repaired with
+        `core.gograph.regional_rerank` and the new order is swapped into
+        the tenant's families at the batch boundary (:meth:`swap_order`
+        semantics: in-flight state carried by pure device-side permutation,
+        bitwise for min/max).
+    reorder_regions : rank regions the metric tracker watches per tenant.
+    reorder_patience : consecutive order swaps with no measured
+        rounds-per-query win before the per-tenant auto-tuner disables
+        reordering for that tenant (`ServerStats.reorders_disabled`).
     """
 
     def __init__(
@@ -192,9 +273,31 @@ class GraphServer:
         max_rounds_per_query: int = 2000,
         transfer_guard: Optional[str] = None,
         push_threshold: float = 0.0,
+        rank: Optional[np.ndarray] = None,
+        reorder_threshold: float = 0.0,
+        reorder_regions: int = 8,
+        reorder_patience: int = 2,
     ) -> None:
         if refill not in ("continuous", "static"):
             raise ValueError(f"unknown refill mode {refill!r}")
+        if not 0.0 <= reorder_threshold <= 1.0:
+            raise ValueError(
+                f"reorder_threshold is an M fraction in [0, 1], "
+                f"got {reorder_threshold}"
+            )
+        if reorder_regions < 1:
+            raise ValueError(
+                f"reorder_regions must be >= 1, got {reorder_regions}"
+            )
+        if reorder_patience < 1:
+            raise ValueError(
+                f"reorder_patience must be >= 1, got {reorder_patience}"
+            )
+        if rank is not None and graph is None:
+            raise ValueError(
+                "rank orders the default tenant; pass graph=, or use "
+                "add_tenant(name, graph, rank=...) for named tenants"
+            )
         if transfer_guard not in (None, "allow", "log", "disallow"):
             raise ValueError(
                 f"transfer_guard must be None, 'allow', 'log' or 'disallow', "
@@ -221,13 +324,20 @@ class GraphServer:
                 "rounds_per_batch must be a multiple of sweeps_per_call "
                 "(the megakernel advances whole batches of sweeps)"
             )
+        self.reorder_threshold = reorder_threshold
+        self.reorder_regions = reorder_regions
+        self.reorder_patience = reorder_patience
         self.tenants: dict[str, _Tenant] = {}
         if graph is not None:
-            self.tenants[DEFAULT_TENANT] = _Tenant(DEFAULT_TENANT, graph)
+            ten = _Tenant(DEFAULT_TENANT, graph)
+            self.tenants[DEFAULT_TENANT] = ten
+            self._init_tenant_order(ten, rank)
         for name, g in (graphs or {}).items():
             if name in self.tenants:
                 raise ValueError(f"duplicate tenant {name!r}")
-            self.tenants[name] = _Tenant(name, g)
+            ten = _Tenant(name, g)
+            self.tenants[name] = ten
+            self._init_tenant_order(ten, None)
         if not self.tenants:
             raise ValueError("GraphServer needs at least one graph to serve")
         self.slots = slots
@@ -267,11 +377,40 @@ class GraphServer:
 
     # ------------------------------------------------------------------ API
 
-    def add_tenant(self, name: str, graph: Graph) -> None:
-        """Serve another independent graph under ``name``."""
+    def add_tenant(self, name: str, graph: Graph,
+                   rank: Optional[np.ndarray] = None) -> None:
+        """Serve another independent graph under ``name``, optionally under
+        a processing order ``rank`` (see the constructor's ``rank``)."""
         if name in self.tenants:
             raise ValueError(f"duplicate tenant {name!r}")
-        self.tenants[name] = _Tenant(name, graph)
+        ten = _Tenant(name, graph)
+        self.tenants[name] = ten
+        self._init_tenant_order(ten, rank)
+
+    def swap_order(self, rank: np.ndarray,
+                   tenant: str = DEFAULT_TENANT) -> None:
+        """Swap a new processing order into ``tenant`` at a batch boundary.
+
+        Every in-flight column's state (and its convergence bookkeeping) is
+        carried into the new order by a pure device-side permutation
+        (`harness.gather_rows` — a bit-copy, so min/max states move
+        bitwise), queued tickets are untouched (they pack under the new
+        order at swap-in), and round counts continue exactly: a swap is
+        invisible to a query's value trajectory, only future sweeps visit
+        vertices in the new order. The online-reordering path
+        (``reorder_threshold``) calls the same machinery after a regional
+        re-rank.
+        """
+        ten = self._tenant(tenant)
+        rank = np.asarray(rank)
+        check_permutation(rank, ten.g.n)
+        rank_old = ten.rank
+        if ten.tuner is None:
+            ten.tuner = _ReorderTuner(patience=self.reorder_patience)
+        self._set_rank(ten, rank)
+        for fam in self._families.values():
+            if fam.tenant == tenant:
+                self._rebuild_family(fam, rank_old=rank_old)
 
     def submit(
         self, algo: str, params: Optional[dict] = None, *,
@@ -410,9 +549,28 @@ class GraphServer:
             )
         ten.g = g_new
         self.stats.deltas_applied += 1
+        rank_old = ten.rank
+        if ten.rank is not None:
+            # incremental order maintenance: place appended vertices (rank-
+            # relative order of existing vertices is preserved, so the O(|d|)
+            # tracker update stays exact), then check for regional decay
+            rank_ext = ten.maintainer.extend(g_new)
+            if ten.tracker is not None:
+                ten.tracker.apply_delta(
+                    delta, rank_new=rank_ext if delta.n_add else None
+                )
+            ten.rank = rank_ext
+            ten.order = rank_to_order(rank_ext)
+            if (ten.tracker is not None and ten.tuner.enabled
+                    and self.reorder_threshold > 0.0):
+                decayed = ten.tracker.decayed_regions(self.reorder_threshold)
+                if len(decayed):
+                    members = ten.tracker.region_members(decayed)
+                    rank2 = regional_rerank(g_new, rank_ext, members)
+                    self._set_rank(ten, rank2)
         for fam in self._families.values():
             if fam.tenant == tenant:
-                self._rebuild_family(fam, delta=delta)
+                self._rebuild_family(fam, delta=delta, rank_old=rank_old)
 
     # ------------------------------------------------------------ internals
 
@@ -426,6 +584,43 @@ class GraphServer:
 
     def _busy(self) -> bool:
         return any(f.occupied() for f in self._families.values())
+
+    def _init_tenant_order(self, ten: _Tenant,
+                           rank: Optional[np.ndarray]) -> None:
+        """Arm a tenant's ordering state: an explicit rank, or the identity
+        order when online reordering is on (the tracker needs *some* base
+        order to watch decay against); no rank + reordering off keeps the
+        id-order fast path (every ordering field stays None)."""
+        if rank is None:
+            if self.reorder_threshold == 0.0:
+                return
+            rank = np.arange(ten.g.n, dtype=np.int64)
+        else:
+            rank = np.asarray(rank)
+            check_permutation(rank, ten.g.n)
+        ten.rank = rank
+        ten.order = rank_to_order(rank)
+        ten.maintainer = RankMaintainer(rank)
+        ten.tuner = _ReorderTuner(patience=self.reorder_patience)
+        if self.reorder_threshold > 0.0:
+            ten.tracker = MetricTracker(
+                ten.g, rank, regions=self.reorder_regions
+            )
+
+    def _set_rank(self, ten: _Tenant, rank_new: np.ndarray) -> None:
+        """Adopt an arbitrary new order for a tenant (rank already
+        validated): rebase the metric tracker (relative order is not
+        preserved, so the O(|delta|) update rule does not apply), restart
+        incremental order maintenance from the new rank, and let the
+        auto-tuner open a rounds-per-query measurement window."""
+        ten.rank = np.asarray(rank_new)
+        ten.order = rank_to_order(ten.rank)
+        if ten.tracker is not None:
+            ten.tracker.rebase(ten.g, ten.rank)
+        ten.maintainer = RankMaintainer(ten.rank)
+        if ten.tuner is not None:
+            ten.tuner.note_swap()
+        self.stats.record_reorder(ten.name)
 
     # constructor params that name vertices; validated against the CURRENT
     # graph at swap-in time — numpy would otherwise accept a negative id
@@ -461,10 +656,17 @@ class GraphServer:
     def _make_family(self, key: tuple, tenant: str,
                      probe: AlgoInstance) -> _Family:
         n, d = probe.n, self.slots
+        # a ranked tenant's session lives in rank space: the resident state
+        # matrix row p is the vertex at order position p, so the engine's
+        # block sweep IS the GoGraph processing order. fam.probe (and every
+        # fam.queries entry) stays in id space — compat checks, delta diffs
+        # and cache support are order-independent concerns
+        ten = self._tenant(tenant)
+        structural = probe.relabel(ten.rank) if ten.rank is not None else probe
         # idle columns are pinned everywhere: they converge on their first
         # verification round and can never influence a real query's column
         idle = dataclasses.replace(
-            probe,
+            structural,
             x0=np.zeros((n, d), np.float32),
             c=np.full((n, d), probe.c_pad_fill, np.float32),
             fixed=np.ones((n, d), bool),
@@ -518,7 +720,13 @@ class GraphServer:
             )
 
     def _install(self, fam: _Family, j: int, t: Ticket, q: AlgoInstance) -> None:
-        fam.session.swap_in(j, q.x0[:, 0], q.c[:, 0], q.fixed[:, 0])
+        x0, c, fixed = q.x0[:, 0], q.c[:, 0], q.fixed[:, 0]
+        order = self._tenant(fam.tenant).order
+        if order is not None:
+            # pack the id-space query into the session's rank space (host
+            # gathers: these (n,) operands are crossing to the device anyway)
+            x0, c, fixed = x0[order], c[order], fixed[order]
+        fam.session.swap_in(j, x0, c, fixed)
         fam.tickets[j] = t
         fam.queries[j] = q
         t.status = "running"
@@ -549,11 +757,19 @@ class GraphServer:
 
     def _resolve(self, fam: _Family, j: int, t: Ticket, converged: bool) -> None:
         q = fam.queries[j]
+        ten = self._tenant(fam.tenant)
         # the ONE (n,)-sized device->host transfer of a query's lifecycle
         x = jax.device_get(
             fam.session.state[:, j]
         )  # repro: allow-host-sync(resolved column becomes the ticket result)
+        if ten.rank is not None:
+            x = x[ten.rank]   # rank space -> id space (x_id[v] = x_r[rank[v]])
         t.result = x
+        if ten.tuner is not None and converged:
+            was_enabled = ten.tuner.enabled
+            ten.tuner.record_resolve(t.rounds)
+            if was_enabled and not ten.tuner.enabled:
+                self.stats.record_reorder_disabled(ten.name)
         t.converged = converged
         t.status = "done"
         t.resolved_at = self.stats.now()
@@ -584,15 +800,21 @@ class GraphServer:
         fam.queries[j] = None
 
     def _rebuild_family(
-        self, fam: _Family, delta: Optional[GraphDelta] = None
+        self, fam: _Family, delta: Optional[GraphDelta] = None,
+        rank_old: Optional[np.ndarray] = None,
     ) -> None:
+        ten = self._tenant(fam.tenant)
         probe_old = fam.probe
-        probe_new = remake(probe_old, self._tenant(fam.tenant).g)
+        probe_new = remake(probe_old, ten.g)
         occupied = [(j, t, fam.queries[j]) for j, t in fam.occupied()]
         old_state = fam.session.state   # device (n_old, d); read per column
         new = self._make_family(fam.key, fam.tenant, probe_new)
+        # a pure order swap (delta is None) always carries state: the carry
+        # is a bit-exact permutation, so even delta_mode="restart" (which
+        # exists to keep round counts solo-exact) loses nothing by keeping it
+        carry = self.delta_mode == "warm" or delta is None
         region = None
-        if self.delta_mode == "warm" and probe_new.semiring.reduce != "sum":
+        if carry and delta is not None and probe_new.semiring.reduce != "sum":
             # a loosening delta (deletions / weights moved against the
             # reduce direction) can invalidate warm values; mask everything
             # downstream of the loosened edges back to x0 and recompute —
@@ -614,17 +836,23 @@ class GraphServer:
             closure = delta.touched_vertices(g_new, closure=1)
             absorb = len(closure) / max(g_new.n, 1) < self.push_threshold
         for j, t, q_old in occupied:
-            q_new = remake(q_old, self._tenant(fam.tenant).g)
+            q_new = remake(q_old, ten.g)
             self._install(new, j, t, q_new)
-            if self.delta_mode == "warm":
+            if carry:
                 # device-side warm carry (the jnp mirror of `engine.
                 # incremental.warm_state` for one column): surviving
                 # vertices keep their device values, appended vertices
-                # start at x0, pins and the loosened region serve x0
+                # start at x0, pins and the loosened region serve x0.
+                # The carry itself is assembled in id space — the old
+                # session's rank (if any) is undone first and the new
+                # tenant order applied last, two jitted device gathers
+                # (`harness.gather_rows`, bit-copies: min/max states and
+                # the loosening/pin masks move bitwise)
+                old_col = old_state[: q_old.n, j]
+                if rank_old is not None:
+                    old_col = harness.gather_rows(old_col, rank_old)
                 base = jnp.asarray(q_new.x0[:, 0])
-                col = jnp.concatenate(
-                    [old_state[: q_old.n, j], base[q_old.n:]]
-                )
+                col = jnp.concatenate([old_col, base[q_old.n:]])
                 col = jnp.where(jnp.asarray(q_new.fixed[:, 0]), base, col)
                 if region is not None:
                     col = jnp.where(jnp.asarray(region), base, col)
@@ -648,6 +876,8 @@ class GraphServer:
                             np.asarray(res.x, np.float32).reshape(-1)
                         )
                         rounds += res.rounds
+                if ten.order is not None:
+                    col = harness.gather_rows(col, ten.order)
                 new.session.load_state_column(j, col)
                 # the new session's accounting starts at 0; carry the
                 # rounds the warm continuation (and any push absorption)

@@ -52,6 +52,10 @@ class ServerStats:
     # fairness gate reads (no tenant's share may starve; see benchmarks)
     tenant_batches: dict = dataclasses.field(default_factory=dict)
     tenant_rounds: dict = dataclasses.field(default_factory=dict)
+    # online reordering telemetry: order swaps applied per tenant, and the
+    # tenants whose auto-tuner measured no rounds-win and gave up
+    reorders: dict = dataclasses.field(default_factory=dict)
+    reorders_disabled: dict = dataclasses.field(default_factory=dict)
     occupancy_trace: list = dataclasses.field(default_factory=list)
     _latency_s: list = dataclasses.field(default_factory=list)
     _wait_s: list = dataclasses.field(default_factory=list)
@@ -90,6 +94,14 @@ class ServerStats:
                 self.tenant_rounds.get(tenant, 0) + rounds
             )
         self._append(self.occupancy_trace, occupied / max(1, self.slots))
+
+    def record_reorder(self, tenant: str) -> None:
+        """An order swap (regional re-rank or explicit swap_order) landed."""
+        self.reorders[tenant] = self.reorders.get(tenant, 0) + 1
+
+    def record_reorder_disabled(self, tenant: str) -> None:
+        """The tenant's auto-tuner measured no rounds-win and gave up."""
+        self.reorders_disabled[tenant] = True
 
     def record_fail(self) -> None:
         """A submission rejected before running (bad params); kept out of
@@ -134,6 +146,8 @@ class ServerStats:
             "deadline_misses": self.deadline_misses,
             "tenant_batches": dict(self.tenant_batches),
             "tenant_rounds": dict(self.tenant_rounds),
+            "reorders": dict(self.reorders),
+            "reorders_disabled": dict(self.reorders_disabled),
             "elapsed_s": elapsed,
             "throughput_qps": self.resolved / elapsed if elapsed > 0 else 0.0,
             "latency_p50_s": percentile(self._latency_s, 50),

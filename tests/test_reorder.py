@@ -1,0 +1,436 @@
+"""Online reordering: incremental metric tracking, regional re-rank, and the
+live order swap in the serving loop (PR 9).
+
+The load-bearing contracts:
+
+* `MetricTracker` is *exact* — ``tracker.M == metric_m(g, rank)`` after any
+  `GraphDelta` sequence (property-tested), because old edges' positivity
+  depends only on the relative order of their endpoints, which order-
+  preserving extensions keep.
+* `extend_rank` / `RankMaintainer` always emit valid permutations and never
+  move existing vertices relative to each other.
+* `regional_rerank` recovers M on a decayed order while non-members keep
+  their exact relative order.
+* An order swap is invisible to a query's value trajectory: a ranked (or
+  re-ranked mid-flight) GraphServer resolves every ticket with exactly the
+  solo engine's result — bitwise for min/max semirings, within eps for sum —
+  including the pallas megakernel under ``transfer_guard="disallow"``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metric
+from repro.core.gograph import RankMaintainer, extend_rank, regional_rerank
+from repro.core.metric import MetricTracker, metric_m, metric_m_jax
+from repro.engine.api import EngineOptions, EngineOptionsError, solve
+from repro.engine.algorithms import get_algorithm
+from repro.graphs import generators as gen
+from repro.graphs.delta import GraphDelta, random_delta
+from repro.graphs.graph import Graph, check_permutation
+from repro.serving.server import GraphServer, _ReorderTuner
+
+
+def _weighted(g, seed=0):
+    rng = np.random.default_rng(seed)
+    return dataclasses.replace(
+        g, w=rng.uniform(0.1, 1.0, g.m).astype(np.float32)
+    )
+
+
+def _shuffled_path(n, seed=7):
+    """Directed path over shuffled ids + its perfect rank (chain order)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    g = Graph(
+        n=n, src=perm[:-1].astype(np.int64), dst=perm[1:].astype(np.int64),
+        w=np.ones(n - 1, np.float32),
+    )
+    rank = np.empty(n, np.int64)
+    rank[perm] = np.arange(n)
+    return g, rank, perm
+
+
+def _reverse_segment(perm, lo, hi):
+    """Delta reversing the chain segment at positions [lo, hi]."""
+    seg = perm[lo:hi + 1]
+    return GraphDelta(
+        del_src=seg[:-1].astype(np.int64), del_dst=seg[1:].astype(np.int64),
+        add_src=seg[1:].astype(np.int64), add_dst=seg[:-1].astype(np.int64),
+        add_w=np.ones(hi - lo, np.float32),
+    )
+
+
+@st.composite
+def delta_scripts(draw):
+    """A start graph + a seed-script of mixed random deltas."""
+    n = draw(st.integers(12, 80))
+    g = gen.erdos_renyi(n, draw(st.floats(1.5, 4.0)), seed=draw(st.integers(0, 30)))
+    steps = []
+    for _ in range(draw(st.integers(1, 6))):
+        steps.append(dict(
+            frac_add=draw(st.floats(0.0, 0.15)),
+            frac_del=draw(st.floats(0.0, 0.15)),
+            frac_rew=draw(st.floats(0.0, 0.2)),
+            n_add_vertices=draw(st.integers(0, 4)),
+            seed=draw(st.integers(0, 1000)),
+        ))
+    return g, steps
+
+
+# --------------------------------------------------------------- the tracker
+
+@given(delta_scripts(), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_tracker_matches_recompute_exactly(script, seed):
+    """tracker.M == metric_m(g, rank) after every delta in the sequence, and
+    the per-region counts sum to (M, m)."""
+    g, steps = script
+    rank = np.random.default_rng(seed).permutation(g.n).astype(np.int64)
+    tr = MetricTracker(g, rank, regions=5)
+    maint = RankMaintainer(rank)
+    for kw in steps:
+        d = random_delta(g, **kw)
+        g = d.apply(g)
+        if d.n_add:
+            rank = maint.extend(g)
+            tr.apply_delta(d, rank_new=rank)
+        else:
+            tr.apply_delta(d)
+        assert tr.M == metric_m(g, rank)
+        assert tr.m_edges == g.m
+        assert int(tr.region_m.sum()) == tr.M
+        assert int(tr.region_edges.sum()) == g.m
+        # per-region counts against a reference recount at the tracker's own
+        # (rebase-frozen, forward-filled) region assignment
+        reg = tr.region_of[g.dst]
+        pos = rank[g.src] < rank[g.dst]
+        np.testing.assert_array_equal(
+            tr.region_m, np.bincount(reg[pos], minlength=tr.regions))
+        np.testing.assert_array_equal(
+            tr.region_edges, np.bincount(reg, minlength=tr.regions))
+
+
+def test_tracker_requires_extended_rank_for_appends():
+    g = gen.erdos_renyi(20, 2.0, seed=0)
+    tr = MetricTracker(g, np.arange(20))
+    d = random_delta(g, n_add_vertices=2, seed=1)
+    with pytest.raises(ValueError, match="extended rank"):
+        tr.apply_delta(d)
+
+
+def test_tracker_rebase_after_arbitrary_reorder():
+    g = gen.powerlaw_cluster(60, 3, seed=2)
+    rng = np.random.default_rng(3)
+    tr = MetricTracker(g, rng.permutation(g.n).astype(np.int64), regions=4)
+    new_rank = rng.permutation(g.n).astype(np.int64)
+    tr.rebase(g, new_rank)
+    assert tr.M == metric_m(g, new_rank)
+    assert np.array_equal(tr.rank, new_rank)
+
+
+def test_decayed_regions_trigger_is_local():
+    g, rank, perm = _shuffled_path(256)
+    tr = MetricTracker(g, rank, regions=8)
+    assert tr.m_frac == 1.0
+    d = _reverse_segment(perm, 64, 112)
+    tr.apply_delta(d)
+    g2 = d.apply(g)
+    assert tr.M == metric_m(g2, rank)
+    decayed = tr.decayed_regions(0.9)
+    assert len(decayed) >= 1
+    # regions far from the reversed span keep fraction 1.0 -> never trigger
+    assert tr.fractions()[0] == 1.0 and tr.fractions()[-1] == 1.0
+    assert 0 not in decayed and tr.regions - 1 not in decayed
+
+
+# ------------------------------------------------- extend_rank / maintainer
+
+@given(delta_scripts(), st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_extend_rank_stays_a_permutation(script, seed):
+    """Regression: repeated deltas with appended vertices keep the extended
+    rank a valid permutation, and existing vertices never move relative to
+    each other (the tracker-exactness precondition)."""
+    g, steps = script
+    rank = np.random.default_rng(seed).permutation(g.n).astype(np.int64)
+    for kw in steps:
+        kw = dict(kw, n_add_vertices=max(1, kw["n_add_vertices"]))
+        d = random_delta(g, **kw)
+        g_new = d.apply(g)
+        rank_new = extend_rank(g_new, rank)
+        check_permutation(rank_new, g_new.n)
+        old = np.argsort(rank[:g.n], kind="stable")
+        still = np.argsort(rank_new[:g.n], kind="stable")
+        np.testing.assert_array_equal(old, still)
+        g, rank = g_new, rank_new
+
+
+def test_maintainer_matches_oneshot_extend_rank():
+    g = gen.erdos_renyi(40, 2.5, seed=4)
+    rank = np.random.default_rng(5).permutation(g.n).astype(np.int64)
+    maint = RankMaintainer(rank)
+    for s in range(4):
+        d = random_delta(g, frac_add=0.05, n_add_vertices=2, seed=s)
+        g_new = d.apply(g)
+        np.testing.assert_array_equal(maint.extend(g_new), extend_rank(g_new, rank))
+        rank = maint.rank()
+        g = g_new
+
+
+# ----------------------------------------------------------- regional rerank
+
+def test_regional_rerank_recovers_decayed_segment():
+    g, rank, perm = _shuffled_path(256)
+    tr = MetricTracker(g, rank, regions=8)
+    d = _reverse_segment(perm, 64, 112)
+    g2 = d.apply(g)
+    tr.apply_delta(d)
+    members = tr.region_members(tr.decayed_regions(0.9))
+    assert len(members)
+    rank2 = regional_rerank(g2, rank, members)
+    check_permutation(rank2, g2.n)
+    m_old, m_new = metric_m(g2, rank), metric_m(g2, rank2)
+    assert m_new > m_old
+    assert m_new >= g2.m - 1  # a path re-chains to all-but-one positive
+    # non-members keep their exact relative order
+    is_member = np.zeros(g2.n, bool)
+    is_member[members] = True
+    rest = np.where(~is_member)[0]
+    np.testing.assert_array_equal(
+        rest[np.argsort(rank[rest], kind="stable")],
+        rest[np.argsort(rank2[rest], kind="stable")],
+    )
+
+
+def test_regional_rerank_empty_members_is_identity():
+    g = gen.erdos_renyi(30, 2.0, seed=6)
+    rank = np.random.default_rng(7).permutation(g.n).astype(np.int64)
+    np.testing.assert_array_equal(
+        regional_rerank(g, rank, np.array([], np.int64)), rank)
+
+
+# ------------------------------------------------------------- metric_m_jax
+
+def test_metric_m_jax_matches_numpy():
+    g = gen.powerlaw_cluster(80, 3, seed=8)
+    rank = np.random.default_rng(9).permutation(g.n).astype(np.int64)
+    got = int(metric_m_jax(g.src, g.dst, np.asarray(rank)))
+    assert got == metric_m(g, rank)
+
+
+def test_metric_m_jax_raises_past_int32_bound(monkeypatch):
+    """Past the int32 edge bound without x64, the count must refuse to run
+    rather than silently wrap (exercised by shrinking the bound)."""
+    import jax
+    if jax.config.jax_enable_x64:
+        pytest.skip("x64 enabled: int64 accumulation, no bound")
+    g = gen.erdos_renyi(30, 3.0, seed=10)
+    monkeypatch.setattr(metric, "METRIC_EDGE_BOUND", g.m - 1)
+    with pytest.raises(OverflowError, match="int32 accumulation bound"):
+        metric_m_jax(g.src, g.dst, np.arange(g.n))
+
+
+# -------------------------------------------------------- solve(rank=...)
+
+def test_solve_rank_parity_minmax_bitwise():
+    g = _weighted(gen.powerlaw_cluster(120, 4, p=0.3, seed=11), seed=11)
+    rank = np.random.default_rng(12).permutation(g.n).astype(np.int64)
+    q = get_algorithm("sssp", g, source=3)
+    base = np.asarray(solve(q).x)
+    ranked = np.asarray(solve(q, rank=rank).x)
+    np.testing.assert_array_equal(base, ranked)
+
+
+def test_solve_rank_parity_sum_within_eps():
+    g = gen.powerlaw_cluster(100, 3, seed=13)
+    rank = np.random.default_rng(14).permutation(g.n).astype(np.int64)
+    q = get_algorithm("pagerank", g, eps=1e-6)
+    base = np.asarray(solve(q).x)
+    ranked = np.asarray(solve(q, rank=rank).x)
+    np.testing.assert_allclose(base, ranked, atol=5e-6, rtol=1e-5)
+
+
+def test_solve_rank_validation():
+    g = gen.erdos_renyi(20, 2.0, seed=15)
+    q = get_algorithm("sssp", g, source=0)
+    with pytest.raises(EngineOptionsError, match="rank"):
+        solve(q, options=EngineOptions(rank=np.zeros((2, 2), np.int64)))
+    with pytest.raises(EngineOptionsError, match="rank"):
+        solve(q, options=EngineOptions(rank=np.arange(g.n - 1)))
+
+
+# ------------------------------------------------------- serving order swap
+
+def _solo(g, algo, **params):
+    return np.asarray(solve(get_algorithm(algo, g, **params)).x)
+
+
+def test_server_ranked_tenant_solo_exact():
+    g, rank, perm = _shuffled_path(128)
+    srv = GraphServer(g, slots=4, bs=16, rounds_per_batch=2,
+                      transfer_guard="disallow", rank=rank)
+    ts = [srv.submit("sssp", {"source": int(perm[i])}) for i in (0, 3, 40)]
+    srv.run()
+    for t in ts:
+        assert t.converged
+        np.testing.assert_array_equal(
+            t.result, _solo(g, "sssp", source=t.params["source"]))
+
+
+def test_server_midflight_swap_bitwise_minmax():
+    """Converged/warm family state permuted into a new rank resolves every
+    in-flight ticket with exactly the solo engine's result."""
+    g, rank, perm = _shuffled_path(128)
+    srv = GraphServer(g, slots=4, bs=16, rounds_per_batch=2,
+                      transfer_guard="disallow")
+    ts = [srv.submit("sssp", {"source": int(perm[i])}) for i in (0, 5, 60)]
+    srv.step()          # some columns mid-flight, some maybe converged
+    srv.swap_order(rank)
+    srv.run()
+    assert srv.stats.reorders.get("default") == 1
+    for t in ts:
+        assert t.converged
+        np.testing.assert_array_equal(
+            t.result, _solo(g, "sssp", source=t.params["source"]))
+
+
+def test_server_midflight_swap_sum_within_eps():
+    g = gen.powerlaw_cluster(96, 3, seed=16)
+    rank = np.random.default_rng(17).permutation(g.n).astype(np.int64)
+    srv = GraphServer(g, slots=2, bs=16, rounds_per_batch=2,
+                      transfer_guard="disallow")
+    t = srv.submit("pagerank", {"eps": 1e-6})
+    srv.step()
+    srv.swap_order(rank)
+    srv.run()
+    assert t.converged
+    np.testing.assert_allclose(
+        t.result, _solo(g, "pagerank", eps=1e-6), atol=5e-6, rtol=1e-5)
+
+
+def test_server_pallas_megakernel_swap_under_disallow():
+    g, rank, perm = _shuffled_path(128)
+    srv = GraphServer(g, slots=4, bs=16, rounds_per_batch=4,
+                      sweeps_per_call=2, backend="pallas",
+                      transfer_guard="disallow", rank=rank)
+    ts = [srv.submit("sssp", {"source": int(perm[i])}) for i in (0, 10)]
+    srv.step()
+    new_rank = np.random.default_rng(18).permutation(g.n).astype(np.int64)
+    srv.swap_order(new_rank)
+    srv.run()
+    for t in ts:
+        assert t.converged
+        np.testing.assert_array_equal(
+            t.result, _solo(g, "sssp", source=t.params["source"]))
+
+
+def test_server_online_rerank_triggers_and_stays_exact():
+    g, rank, perm = _shuffled_path(256)
+    srv = GraphServer(g, slots=4, bs=16, rounds_per_batch=2,
+                      transfer_guard="disallow", rank=rank,
+                      reorder_threshold=0.9, reorder_regions=8)
+    ts = [srv.submit("sssp", {"source": int(perm[0])})]
+    srv.step()
+    d = _reverse_segment(perm, 64, 112)
+    srv.apply_delta(d)
+    g2 = d.apply(g)
+    ts.append(srv.submit("sssp", {"source": int(perm[-1])}))
+    srv.run()
+    assert srv.stats.reorders.get("default", 0) >= 1
+    ten = srv.tenants["default"]
+    assert ten.tracker.M == metric_m(ten.g, ten.rank)
+    for t in ts:
+        assert t.converged
+        np.testing.assert_array_equal(
+            t.result, _solo(g2, "sssp", source=t.params["source"]))
+
+
+def test_server_delta_with_appended_vertices_ranked():
+    g, rank, perm = _shuffled_path(96)
+    srv = GraphServer(g, slots=2, bs=16, rounds_per_batch=2,
+                      transfer_guard="disallow", rank=rank,
+                      reorder_threshold=0.5)
+    t0 = srv.submit("sssp", {"source": int(perm[0])})
+    srv.step()
+    n = g.n
+    d = GraphDelta(
+        n_add=2,
+        add_src=np.array([perm[-1], n], np.int64),
+        add_dst=np.array([n, n + 1], np.int64),
+        add_w=np.ones(2, np.float32),
+    )
+    srv.apply_delta(d)
+    g2 = d.apply(g)
+    t1 = srv.submit("sssp", {"source": int(perm[0])})
+    srv.run()
+    for t in (t0, t1):
+        assert t.converged
+        np.testing.assert_array_equal(
+            t.result, _solo(g2, "sssp", source=t.params["source"]))
+
+
+# ------------------------------------------------------------ the auto-tuner
+
+def test_tuner_disables_after_patience_no_gain():
+    tu = _ReorderTuner(patience=2, window=4)
+    for r in [10, 10, 10, 10]:
+        tu.record_resolve(r)
+    for _ in range(2):
+        tu.note_swap()
+        for r in [10, 10, 10, 10]:   # no improvement
+            tu.record_resolve(r)
+    assert not tu.enabled and tu.strikes == 2
+
+
+def test_tuner_keeps_going_on_real_gains():
+    tu = _ReorderTuner(patience=2, window=4)
+    rounds = 16
+    for _ in range(4):
+        for _ in range(4):
+            tu.record_resolve(rounds)
+        tu.note_swap()
+        rounds //= 2    # every swap halves rounds-per-query
+    for _ in range(4):
+        tu.record_resolve(rounds)
+    assert tu.enabled and tu.strikes == 0
+
+
+def test_server_records_tuner_disable():
+    g, rank, perm = _shuffled_path(64)
+    srv = GraphServer(g, slots=2, bs=16, rounds_per_batch=2, cache=False,
+                      transfer_guard="disallow", rank=rank,
+                      reorder_threshold=0.9, reorder_patience=1)
+    ten = srv.tenants["default"]
+    ten.tuner.window = 2
+    # the same query over and over: rounds-per-query is flat, so a swap
+    # measurably gains nothing and one no-gain swap (patience=1) disables
+    for _ in range(3):
+        srv.submit("sssp", {"source": int(perm[0])})
+        srv.run()
+    srv.swap_order(rank.copy())
+    for _ in range(2):
+        srv.submit("sssp", {"source": int(perm[0])})
+        srv.run()
+    assert not ten.tuner.enabled
+    assert srv.stats.reorders_disabled.get("default") is True
+    # reordering off: a decaying delta no longer triggers a re-rank
+    before = srv.stats.reorders.get("default", 0)
+    d = _reverse_segment(perm, 16, 40)
+    srv.apply_delta(d)
+    assert srv.stats.reorders.get("default", 0) == before
+    assert ten.tracker.M == metric_m(ten.g, ten.rank)  # tracker keeps counting
+
+
+def test_server_reorder_knob_validation():
+    g = gen.erdos_renyi(16, 2.0, seed=19)
+    with pytest.raises(ValueError, match="reorder_threshold"):
+        GraphServer(g, reorder_threshold=1.5)
+    with pytest.raises(ValueError, match="reorder_regions"):
+        GraphServer(g, reorder_regions=0)
+    with pytest.raises(ValueError, match="reorder_patience"):
+        GraphServer(g, reorder_patience=0)
+    with pytest.raises(ValueError, match="rank"):
+        GraphServer(graphs={"a": g}, rank=np.arange(16))

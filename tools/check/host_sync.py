@@ -51,6 +51,8 @@ CHECKER = "host-sync"
 
 # Hot-path modules under the residency contract (repo-relative).
 HOT_PATH_GLOBS = (
+    "src/repro/core/gograph.py",
+    "src/repro/core/metric.py",
     "src/repro/engine/async_block.py",
     "src/repro/engine/harness.py",
     "src/repro/serving/server.py",
