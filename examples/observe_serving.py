@@ -1,0 +1,135 @@
+"""Observability walkthrough: trace a skewed serving workload end to end.
+
+The PR-5 serving benchmark's workload — a hub cluster plus a path tail
+feeding into it, so SSSP sources on the hub converge in a handful of
+rounds while tail sources need dozens — served to TWO tenants of one
+:class:`repro.serving.GraphServer` with a `repro.obs.Tracer` writing every
+span to a JSONL file. Afterwards the script reads the sink back (exactly
+what a dashboard would do) and renders, with no dependencies beyond the
+stdlib and numpy:
+
+* the per-tenant resolved-rounds histogram (text bars) from the
+  ``resolve`` events — the skew made visible;
+* the residual decay of one traced solo solve as a unicode sparkline from
+  ``RunResult.convergence_trace`` — the paper's Fig. 7 quantity;
+* an excerpt of the Prometheus exposition `GraphServer.metrics_text()`
+  serves.
+
+    PYTHONPATH=src python examples/observe_serving.py
+"""
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro import GraphServer, get_algorithm, solve
+from repro.engine.api import EngineOptions
+from repro.graphs import generators as gen
+from repro.graphs.graph import Graph
+from repro.obs import Tracer
+
+HUB_N = 500
+TAIL_N = 140
+N_QUERIES = 48
+SLOTS = 8
+BARS = "▁▂▃▄▅▆▇█"
+
+
+def skewed_graph() -> Graph:
+    """Hub + path-tail-into-hub (see benchmarks/serving_bench.py): hub
+    sources resolve fast, tail sources slow — skewed per-query rounds."""
+    hub = gen.powerlaw_cluster(HUB_N, 5, p=0.4, seed=1)
+    n = hub.n + TAIL_N
+    ps = np.arange(HUB_N + 1, n, dtype=np.int32)
+    pd = np.arange(HUB_N, n - 1, dtype=np.int32)
+    g = Graph(n, np.concatenate([hub.src, ps, [HUB_N]]),
+              np.concatenate([hub.dst, pd, [0]]))
+    return gen.with_random_weights(g, lo=0.1, hi=1.0, seed=2)
+
+
+def sparkline(values, width: int = 48) -> str:
+    v = np.asarray(values, dtype=np.float64)
+    if len(v) > width:   # resample long traces to the terminal width
+        idx = np.linspace(0, len(v) - 1, width).astype(int)
+        v = v[idx]
+    v = np.log10(np.maximum(v, 1e-12))   # residuals decay geometrically
+    lo, hi = v.min(), v.max()
+    span = (hi - lo) or 1.0
+    return "".join(BARS[int((x - lo) / span * (len(BARS) - 1))] for x in v)
+
+
+def text_histogram(samples, edges) -> list[str]:
+    counts, _ = np.histogram(samples, bins=edges)
+    peak = max(int(counts.max()), 1)
+    return [
+        f"    rounds {int(lo):4d}-{int(hi):<4d} "
+        f"{'█' * max(1, int(24 * c / peak)) if c else '':<24} {c}"
+        for lo, hi, c in zip(edges[:-1], edges[1:], counts)
+    ]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    gw = skewed_graph()
+    sink_path = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"),
+                             "spans.jsonl")
+    tracer = Tracer(jsonl=sink_path)
+
+    # --- 1. one traced solo solve: the convergence trace ----------------
+    deep_tail = gw.n - 1
+    algo = get_algorithm("sssp", gw, source=deep_tail)
+    res = solve(algo, options=EngineOptions(
+        bs=64, trace=tracer, transfer_guard="disallow"))
+    tr = res.convergence_trace
+    print(f"solo SSSP from the tail tip: {res.rounds} rounds, "
+          f"converged={res.converged}, unit={tr.unit}, "
+          f"total work {tr.total_work:.0f}")
+    print(f"  residual decay  {sparkline(tr.residual)}")
+    print(f"  active fraction {sparkline(tr.active_fraction)}")
+
+    # --- 2. two tenants, skewed SSSP stream, fully traced ---------------
+    srv = GraphServer(gw, graphs={"replica": gw}, slots=SLOTS, bs=64,
+                      rounds_per_batch=4, transfer_guard="disallow",
+                      trace=tracer)
+    n_tail = N_QUERIES // 4
+    sources = np.concatenate([
+        rng.integers(0, HUB_N, size=N_QUERIES - n_tail),       # fast
+        rng.integers(HUB_N + TAIL_N // 4, gw.n, size=n_tail),  # slow
+    ])
+    rng.shuffle(sources)
+    for k, s in enumerate(sources):
+        tenant = "default" if k % 2 == 0 else "replica"
+        srv.submit("sssp", {"source": int(s)}, tenant=tenant)
+    srv.run()
+    tracer.close()
+
+    # --- 3. read the sink back, like a dashboard would ------------------
+    with open(sink_path, encoding="utf-8") as fh:
+        spans = [json.loads(line) for line in fh]
+    resolves = [s for s in spans if s["name"] == "resolve"]
+    batches = [s for s in spans if s["name"] == "batch"]
+    print(f"\nJSONL sink {sink_path}: {len(spans)} spans "
+          f"({len(batches)} batches, {len(resolves)} resolves)")
+    edges = [0, 8, 16, 32, 64, 128, 512]
+    for tenant in ("default", "replica"):
+        rounds = [r["rounds"] for r in resolves if r["tenant"] == tenant]
+        print(f"  tenant {tenant!r}: {len(rounds)} resolved, "
+              f"p99 rounds {int(np.percentile(rounds, 99))}")
+        for line in text_histogram(rounds, edges):
+            print(line)
+
+    # --- 4. the Prometheus endpoint -------------------------------------
+    print("\nmetrics_text() excerpt:")
+    wanted = ("repro_queries_resolved_total", "repro_rounds_total",
+              "repro_query_rounds_count")
+    for line in srv.metrics_text().splitlines():
+        if line.startswith(wanted):
+            print("  " + line)
+    s = srv.stats.summary()
+    print(f"\nsummary: rounds p50/p99 {s['rounds_p50']:.0f}/"
+          f"{s['rounds_p99']:.0f}, per-tenant batches {s['tenant_batches']}")
+
+
+if __name__ == "__main__":
+    main()

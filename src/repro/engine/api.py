@@ -102,6 +102,12 @@ class EngineOptions:
         solve runs relabeled — ``x_init`` / ``frontier`` are permuted in and
         the returned state is permuted back — so callers stay in the
         instance's id space while the engine sweeps blocks in rank order.
+    trace : optional `repro.obs.trace.Tracer` — span tracing for the solve
+        (``solve`` / ``pack`` / ``sweep_call`` spans; see `repro.obs`).
+        None or a disabled tracer costs nothing; an enabled one records at
+        batch granularity or coarser, never per round, so a traced solve
+        stays green under ``transfer_guard="disallow"`` and returns results
+        bitwise identical to an untraced one.
     """
 
     x_init: Optional[np.ndarray] = None
@@ -119,6 +125,7 @@ class EngineOptions:
     beta: float = 1.0
     buckets: int = 4
     rank: Optional[np.ndarray] = None
+    trace: Any = None
 
 
 def validate_options(
@@ -188,6 +195,14 @@ def validate_options(
         if algo is not None and len(o.rank) != algo.n:
             raise EngineOptionsError(
                 f"rank covers {len(o.rank)} vertices, instance has {algo.n}"
+            )
+    if o.trace is not None:
+        from repro.obs.trace import Tracer
+
+        if not isinstance(o.trace, Tracer):
+            raise EngineOptionsError(
+                f"trace must be None or a repro.obs.trace.Tracer, "
+                f"got {type(o.trace).__name__}"
             )
     if o.backend == "pallas":
         if engine not in ("async_block", "push"):
@@ -332,17 +347,22 @@ def solve(
         "distributed": distributed._solve,
         "push": push._solve,
     }[engine]
-    if o.transfer_guard is not None:
-        import jax
+    from repro.obs.trace import tspan
 
-        # direction-scoped on purpose: host->device staging of inputs is
-        # normal engine behavior; unaudited device->host readback is the bug
-        # class this sanitizer exists to catch (audited readouts go through
-        # jax.device_get, which the guard always permits)
-        with jax.transfer_guard_device_to_host(o.transfer_guard):
+    with tspan(o.trace, "solve", algo=algo.name, engine=engine,
+               backend=o.backend, n=algo.n, d=algo.d) as sp:
+        if o.transfer_guard is not None:
+            import jax
+
+            # direction-scoped on purpose: host->device staging of inputs is
+            # normal engine behavior; unaudited device->host readback is the
+            # bug class this sanitizer exists to catch (audited readouts go
+            # through jax.device_get, which the guard always permits)
+            with jax.transfer_guard_device_to_host(o.transfer_guard):
+                res = impl(algo, o)
+        else:
             res = impl(algo, o)
-    else:
-        res = impl(algo, o)
+        sp.set(rounds=res.rounds, converged=bool(res.converged))
     if rank is not None:
         x = np.asarray(res.x).reshape(algo.n, -1)[rank]
         if algo.d == 1:

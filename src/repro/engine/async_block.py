@@ -45,6 +45,7 @@ from repro.engine.algorithms import AlgoInstance
 from repro.engine.convergence import RunResult
 from repro.engine import harness
 from repro.engine import jax_ops as J
+from repro.obs.trace import tspan
 
 
 @partial(
@@ -125,8 +126,10 @@ def _solve(algo: AlgoInstance, o) -> RunResult:
             algo, o.bs, o.max_iters, o.inner, o.x_init,
             extrapolate_every=o.extrapolate_every,
             sweeps_per_call=o.sweeps_per_call, frontier=o.frontier,
+            tracer=o.trace,
         )
-    be, x0, c, fixed, npad = harness.pack(algo, o.bs)
+    with tspan(o.trace, "pack", algo=algo.name, n=algo.n, d=algo.d, bs=o.bs):
+        be, x0, c, fixed, npad = harness.pack(algo, o.bs)
     x_start = harness.init_state(x0, o.x_init, algo.n)
     out = _run(
         jnp.asarray(be.esrc), jnp.asarray(be.edst), jnp.asarray(be.ew),
@@ -186,7 +189,7 @@ def run_async_block(
 
 def _run_async_block_pallas(
     algo, bs, max_iters, inner, x_init, interpret=None, extrapolate_every=0,
-    sweeps_per_call=1, frontier=None,
+    sweeps_per_call=1, frontier=None, tracer=None,
 ) -> RunResult:
     from repro.engine.api import EngineOptions, validate_options
     from repro.kernels.ops import _auto_interpret, pack_algorithm
@@ -196,9 +199,10 @@ def _run_async_block_pallas(
     validate_options("async_block", EngineOptions(
         x_init=x_init, extrapolate_every=extrapolate_every, backend="pallas",
         bs=bs, inner=inner, sweeps_per_call=sweeps_per_call,
-        frontier=frontier, max_iters=max_iters,
+        frontier=frontier, max_iters=max_iters, trace=tracer,
     ), algo)
-    ops = pack_algorithm(algo, bs)
+    with tspan(tracer, "pack", algo=algo.name, n=algo.n, d=algo.d, bs=bs):
+        ops = pack_algorithm(algo, bs)
     x_start = harness.init_state(ops["x0_host"], x_init, algo.n)
     if sweeps_per_call == 1 and frontier is None:
         out = _run_pallas(
@@ -230,10 +234,17 @@ def _run_async_block_pallas(
     out = harness.sweep_batched_loop(
         batch_fn, jnp.asarray(x_start), dirty0,
         eps=algo.eps, max_iters=max_iters, sweeps=sweeps_per_call, nb=nb,
-        real_mask=real_mask,
+        real_mask=real_mask, tracer=tracer,
     )
     res = harness.finalize(algo, *out[:6])
     res.active_block_fraction = out[6]
+    # replace finalize's column-granular trace with the megakernel's finer
+    # block-granular work accounting (the frontier-skipping bill)
+    from repro.obs.telemetry import trace_from_block_activity
+
+    res.convergence_trace = trace_from_block_activity(
+        res.residuals, out[6], rounds=res.rounds, nb=nb, bs=bs, d=algo.d,
+    )
     return res
 
 
@@ -303,6 +314,7 @@ class AsyncBlockSession:
         self, algo: AlgoInstance, bs: int = 256, inner: int = 1,
         backend: str = "jax", sweeps_per_call: int = 1,
         interpret: bool | None = None, mesh=None, axis: str = "data",
+        trace=None, trace_attrs: dict | None = None,
     ):
         from repro.engine.api import EngineOptions, validate_options
 
@@ -310,7 +322,7 @@ class AsyncBlockSession:
         validate_options(engine, EngineOptions(
             backend="jax" if backend == "distributed" else backend,
             bs=bs, inner=inner, sweeps_per_call=sweeps_per_call,
-            mesh=mesh, axis=axis,
+            mesh=mesh, axis=axis, trace=trace,
         ), algo)
         self.algo = algo
         self.bs = bs
@@ -319,8 +331,15 @@ class AsyncBlockSession:
         self.sweeps_per_call = sweeps_per_call
         self.n = algo.n
         self.d = algo.d
+        # span tracer + constant attributes (tenant / family / graph_version)
+        # the serving layer stamps on every span this session emits
+        self.trace = trace
+        self.trace_attrs = dict(trace_attrs or {})
+        pack_span = tspan(trace, "pack", algo=algo.name, n=algo.n, d=algo.d,
+                          bs=bs, backend=backend, **self.trace_attrs)
         if backend == "jax":
-            be, x0, c, fixed, _ = harness.pack(algo, bs)
+            with pack_span:
+                be, x0, c, fixed, _ = harness.pack(algo, bs)
             self.nb = be.nb
             self._edges = tuple(
                 jnp.asarray(a) for a in (be.esrc, be.edst, be.ew, be.emask)
@@ -331,8 +350,9 @@ class AsyncBlockSession:
         elif backend == "distributed":
             from repro.engine.distributed import DistContext
 
-            self._dist = DistContext(algo, bs, mesh=mesh, axis=axis,
-                                     inner=inner)
+            with pack_span:
+                self._dist = DistContext(algo, bs, mesh=mesh, axis=axis,
+                                         inner=inner)
             self.nb = self._dist.nb
             self.x0 = jnp.asarray(self._dist.x0)
             self.c = jnp.asarray(self._dist.c)
@@ -340,7 +360,8 @@ class AsyncBlockSession:
         else:
             from repro.kernels.ops import _auto_interpret, pack_algorithm
 
-            ops = pack_algorithm(algo, bs)
+            with pack_span:
+                ops = pack_algorithm(algo, bs)
             self._ops = ops
             self._interpret = _auto_interpret(interpret)
             self.nb = int(ops["rowptr"].shape[0]) - 1
@@ -421,7 +442,19 @@ class AsyncBlockSession:
     def run_batch(self, max_iters: int) -> BatchReport:
         """Advance every column up to ``max_iters`` rounds; converged
         columns freeze (jax / single-sweep pallas) and the batch stops early
-        once all columns are done. Updates the resident state in place."""
+        once all columns are done. Updates the resident state in place.
+
+        With a tracer attached (``trace=`` at construction) the batch is
+        wrapped in a ``batch`` span carrying the session's constant
+        attributes plus this batch's round count and per-round residuals —
+        the residual buffer rides the *same* per-batch ``device_get`` as the
+        convergence report, so tracing never adds a sync point.
+        """
+        with tspan(self.trace, "batch", backend=self.backend,
+                   max_iters=max_iters, **self.trace_attrs) as sp:
+            return self._run_batch_inner(max_iters, sp)
+
+    def _run_batch_inner(self, max_iters: int, sp) -> BatchReport:
         a = self.algo
         if max_iters % self.sweeps_per_call:
             # the megakernel always executes sweeps_per_call sweeps per
@@ -475,15 +508,26 @@ class AsyncBlockSession:
             out = harness.sweep_batched_loop(
                 batch_fn, self.x, self.dirty,
                 eps=a.eps, max_iters=max_iters, sweeps=self.sweeps_per_call,
-                nb=self.nb, real_mask=real_mask,
+                nb=self.nb, real_mask=real_mask, tracer=self.trace,
             )
             self.dirty = out[7]  # device bitmap carried into the next batch
         # the state never leaves the device: the next batch (and any swap)
         # consumes this output buffer directly
         self.x = out[0]
-        rounds, col_done, col_rounds = jax.device_get(
-            (out[1], out[2], out[3])
-        )  # repro: allow-host-sync(per-batch convergence report for the caller)
+        if self.trace is not None and self.trace.enabled:
+            # traced: the per-round residual buffer joins the SAME transfer
+            # (out[4] is already host numpy on the megakernel path and
+            # passes through device_get untouched)
+            rounds, col_done, col_rounds, res_buf = jax.device_get(
+                (out[1], out[2], out[3], out[4])
+            )  # repro: allow-host-sync(per-batch convergence report for the caller)
+            rounds = int(rounds)
+            sp.set(rounds=rounds,
+                   res=[float(v) for v in np.asarray(res_buf)[:rounds]])
+        else:
+            rounds, col_done, col_rounds = jax.device_get(
+                (out[1], out[2], out[3])
+            )  # repro: allow-host-sync(per-batch convergence report for the caller)
         rep = BatchReport(
             rounds=int(rounds),
             col_done=np.asarray(col_done),

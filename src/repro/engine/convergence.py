@@ -20,6 +20,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.telemetry import ConvergenceTrace
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -59,6 +61,11 @@ class RunResult:
     # "rounds". The sparse-delta benchmark compares these against the sweep
     # engines' rounds * n swept vertices.
     push_stats: Optional[dict] = None
+    # uniform per-round telemetry (residual / active fraction / work) filled
+    # by every first-class engine (sync / async_block / distributed / push);
+    # built from already-transferred host data at the existing sync points,
+    # so it costs zero extra device->host transfers (repro.obs.telemetry)
+    convergence_trace: Optional[ConvergenceTrace] = None
 
     @property
     def d(self) -> int:

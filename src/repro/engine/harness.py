@@ -37,6 +37,8 @@ from repro.engine.convergence import (
 from repro.engine import jax_ops as J
 from repro.graphs.blocked import pack_in_edges, pad_state, padded_n
 from repro.graphs.graph import Graph
+from repro.obs.telemetry import trace_from_col_rounds
+from repro.obs.trace import tspan
 
 
 def check_extrapolation(algo: AlgoInstance, extrapolate_every: int) -> None:
@@ -320,6 +322,7 @@ def sweep_batched_loop(
     sweeps: int,
     nb: int,
     real_mask: Optional[np.ndarray] = None,
+    tracer=None,
 ):
     """Host-side round driver for the persistent multi-sweep megakernel.
 
@@ -347,6 +350,13 @@ def sweep_batched_loop(
     post-batch sum is attributed to each of the batch's sweeps) and the
     final dirty-block bitmap, which a serving session carries into its next
     batch so the frontier survives column swaps.
+
+    ``tracer`` (`repro.obs.trace.Tracer`, optional) wraps each kernel launch
+    in a ``sweep_call`` span covering dispatch *and* the batch-granular
+    readout — the launch itself is asynchronous, so dispatch+readout is the
+    only honest per-batch wall time. The span's residual/active attributes
+    are stamped from the same once-per-batch ``device_get`` every untraced
+    run performs — tracing adds no transfers.
     """
     x = x0
     dirty = dirty0
@@ -359,14 +369,20 @@ def sweep_batched_loop(
     act_trace: list[float] = []
     k = 0
     while k < max_iters and not col_done.all():
-        x, deltas, active, dirty = batch_fn(x, dirty)
-        # state-sum trace on device: the batch only ships the (sweeps, d)
-        # delta/active rows and this one scalar to the host, never the state
-        xm = x if rm is None else jnp.where(rm[:, None], x, 0.0)
-        deltas_np, active_np, batch_sum = jax.device_get((
-            deltas, active, jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0)),
-        ))  # repro: allow-host-sync(once-per-batch convergence trace readout)
-        batch_sum = float(batch_sum)
+        with tspan(tracer, "sweep_call", sweeps=sweeps, nb=nb, k=k) as sp:
+            x, deltas, active, dirty = batch_fn(x, dirty)
+            # state-sum trace on device: the batch only ships the (sweeps, d)
+            # delta/active rows and this scalar to the host, never the state
+            xm = x if rm is None else jnp.where(rm[:, None], x, 0.0)
+            deltas_np, active_np, batch_sum = jax.device_get((
+                deltas, active,
+                jnp.sum(jnp.where(jnp.abs(xm) < 1e30, xm, 0.0)),
+            ))  # repro: allow-host-sync(once-per-batch convergence trace readout)
+            batch_sum = float(batch_sum)
+            sp.set(
+                max_delta=float(np.max(deltas_np)),
+                active_blocks=[float(a) for a in active_np[:, 0]],
+            )
         for s in range(sweeps):
             if k >= max_iters or col_done.all():
                 break
@@ -388,7 +404,14 @@ def sweep_batched_loop(
 def finalize(
     algo: AlgoInstance, x, k, col_done, col_rounds, res_buf, sum_buf, *_extra
 ) -> RunResult:
-    """Convert raw loop outputs into a RunResult (d = 1 keeps 1-D x)."""
+    """Convert raw loop outputs into a RunResult (d = 1 keeps 1-D x).
+
+    Also attaches the uniform :class:`~repro.obs.telemetry.ConvergenceTrace`
+    — derived purely from the residual buffer and ``col_rounds`` fetched by
+    this function's single end-of-run readback, so telemetry never adds a
+    transfer (the megakernel path overwrites it with its finer
+    block-granular accounting).
+    """
     # the one end-of-run device->host readback; device_get passes the sweep
     # drivers' host-side numpy outputs through untouched
     x, k, col_done, col_rounds, res_buf, sum_buf = jax.device_get(
@@ -399,12 +422,17 @@ def finalize(
     if algo.d == 1:
         xr = xr[:, 0]
     col_conv = np.asarray(col_done)
+    col_rounds = np.asarray(col_rounds)
+    residuals = np.asarray(res_buf)[:k]
     return RunResult(
         x=xr,
         rounds=k,
         converged=bool(col_conv.all()),
-        residuals=np.asarray(res_buf)[:k],
+        residuals=residuals,
         state_sums=np.asarray(sum_buf)[:k],
-        col_rounds=np.asarray(col_rounds),
+        col_rounds=col_rounds,
         col_converged=col_conv,
+        convergence_trace=trace_from_col_rounds(
+            residuals, col_rounds, rounds=k, n=algo.n, d=algo.d
+        ),
     )

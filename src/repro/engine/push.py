@@ -348,29 +348,48 @@ class _PallasRound:
 
 
 def _solve(algo: AlgoInstance, o: EngineOptions) -> RunResult:
-    """solve()'s dispatch target for ``engine="push"``."""
+    """solve()'s dispatch target for ``engine="push"``.
+
+    Besides the legacy working-round ``residuals`` buffer this driver keeps
+    the uniform per-round :class:`~repro.obs.telemetry.ConvergenceTrace`:
+    one entry per counted round — *including* the empty-frontier accounting
+    rounds (residual 0, work 0) — whose residual is the **post**-round
+    pending metric read at the next round's prep. The metric rides the same
+    fused per-round readout the untraced driver already performs (this is a
+    host-driven engine: its per-round syncs are its execution model, each
+    audited below), so telemetry adds no transfers; only a budget-exhausted
+    exit pays one extra prep to close the final entry.
+    """
+    from repro.obs.telemetry import trace_from_push_counts
+    from repro.obs.trace import tspan
+
     ks = _kernel_semiring(algo)
     n, d = algo.n, algo.d
-    p0, r0 = _init_state(algo, ks, o.x_init)
-    eps_v = (
-        _eps_vec(algo, o.beta) if ks == "plus_times"
-        else np.zeros(n, np.float32)
-    )
-    outdeg = np.bincount(algo.src, minlength=n).astype(np.int64)
+    with tspan(o.trace, "pack", algo=algo.name, n=n, d=d, engine="push",
+               backend=o.backend):
+        p0, r0 = _init_state(algo, ks, o.x_init)
+        eps_v = (
+            _eps_vec(algo, o.beta) if ks == "plus_times"
+            else np.zeros(n, np.float32)
+        )
+        outdeg = np.bincount(algo.src, minlength=n).astype(np.int64)
 
-    p = jnp.asarray(p0)
-    r = jnp.asarray(r0)
-    eps_dev = jnp.asarray(eps_v)
-    prep = _make_prep(ks)
-    round_jax = _make_round_jax(algo, ks) if o.backend == "jax" else None
-    round_pallas = (
-        _PallasRound(algo, ks, o.buckets) if o.backend == "pallas" else None
-    )
+        p = jnp.asarray(p0)
+        r = jnp.asarray(r0)
+        eps_dev = jnp.asarray(eps_v)
+        prep = _make_prep(ks)
+        round_jax = _make_round_jax(algo, ks) if o.backend == "jax" else None
+        round_pallas = (
+            _PallasRound(algo, ks, o.buckets) if o.backend == "pallas" else None
+        )
 
     col_done = np.zeros(d, bool)
     col_rounds = np.zeros(d, np.int32)
     res_buf: list[float] = []
     sum_buf: list[float] = []
+    trace_res: list[float] = []     # post-round metric per counted round
+    trace_pushed: list[float] = []  # vertices settled per counted round
+    open_cols: Optional[np.ndarray] = None  # last round's active columns
     touched = np.zeros(n, bool)
     pushed_total = 0
     edges_total = 0
@@ -378,36 +397,63 @@ def _solve(algo: AlgoInstance, o: EngineOptions) -> RunResult:
     while k < o.max_iters:
         col_live = jnp.asarray(~col_done)
         active_v, res_col, metric, key, ssum = prep(p, r, eps_dev, col_live)
-        res_col_h = np.asarray(jax.device_get(res_col))
+        res_col_h, metric_h = (np.asarray(a) for a in jax.device_get(
+            (res_col, metric)
+        ))  # repro: allow-host-sync(per-round pending counts drive the host frontier loop)
+        if open_cols is not None:
+            # close the previous round's trace entry with its post-round
+            # residual — the value this prep just measured
+            trace_res.append(float(np.max(np.where(open_cols, metric_h, 0.0))))
+            open_cols = None
         _, active_cols, col_done, col_rounds = converge_step(
             res_col_h, 0.0, col_done, col_rounds
         )
         if bool(col_done.all()):
             break
-        mask_h = np.asarray(jax.device_get(active_v))
+        mask_h = np.asarray(jax.device_get(
+            active_v
+        ))  # repro: allow-host-sync(frontier ids select this round's scatter set)
         ids = np.nonzero(mask_h)[0]
         if len(ids) == 0:
             # live columns with zero pending rows: they are done too (their
             # res_col was 0 and converge_step just flagged them) — loop once
             # more to fold the accounting, no work to dispatch
+            trace_res.append(0.0)
+            trace_pushed.append(0.0)
             k += 1
             continue
-        metric_h = np.asarray(jax.device_get(metric))
         res_buf.append(float(np.max(metric_h[active_cols])))
-        sum_buf.append(float(jax.device_get(ssum)))
+        sum_buf.append(float(jax.device_get(
+            ssum
+        )))  # repro: allow-host-sync(per-round state-sum trace sample)
         touched[ids] = True
         pushed_total += int(len(ids))
         edges_total += int(outdeg[ids].sum())
+        trace_pushed.append(float(len(ids)))
+        open_cols = active_cols.copy()
         if round_pallas is not None:
-            key_h = np.asarray(jax.device_get(key))
+            key_h = np.asarray(jax.device_get(
+                key
+            ))  # repro: allow-host-sync(priority keys drive host-side bucketing)
             p, r = round_pallas(p, r, ids, key_h)
         else:
             assert round_jax is not None
             p, r = round_jax(p, r, active_v, col_live)
         k += 1
 
+    if open_cols is not None:
+        # budget exhausted mid-frontier: one extra fused prep supplies the
+        # final round's post-push metric (unconverged exits only)
+        _, _, metric, _, _ = prep(p, r, eps_dev, jnp.asarray(~col_done))
+        metric_h = np.asarray(jax.device_get(
+            metric
+        ))  # repro: allow-host-sync(final trace entry on budget-exhausted exit)
+        trace_res.append(float(np.max(np.where(open_cols, metric_h, 0.0))))
+
     converged = bool(col_done.all())
-    x = np.asarray(jax.device_get(p), np.float32)
+    x = np.asarray(jax.device_get(
+        p
+    ), np.float32)  # repro: allow-host-sync(end-of-run RunResult readout)
     if d == 1:
         x = x[:, 0]
     res = RunResult(
@@ -418,6 +464,7 @@ def _solve(algo: AlgoInstance, o: EngineOptions) -> RunResult:
         state_sums=np.asarray(sum_buf, np.float32),
         col_rounds=col_rounds.copy(),
         col_converged=col_done.copy(),
+        convergence_trace=trace_from_push_counts(trace_res, trace_pushed, n=n),
     )
     res.push_stats = {
         "pushed": pushed_total,

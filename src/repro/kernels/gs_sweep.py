@@ -335,6 +335,13 @@ def gs_multisweep_pallas(
     * ``dirty_out`` int32[nb] — the frontier after the batch; feed it back
       as ``dirty`` to resume, or all-ones to force a full sweep.
 
+    ``deltas`` and ``active`` are also the megakernel's telemetry feed:
+    the engine turns them (after its existing once-per-batch readout) into
+    ``RunResult.convergence_trace`` — per-round residual and
+    ``active_block_fraction`` in ``swept_block_cells`` units
+    (`repro.obs.telemetry.trace_from_block_activity`) — so enabling
+    observability never adds a device->host transfer.
+
     ``eps`` is the in-kernel early-out threshold (static): once a sweep's
     deltas are all <= eps, the batch's remaining sweeps are predicated
     no-ops. ``eps=-1.0`` disables the early-out (metrics are >= 0).

@@ -75,6 +75,7 @@ from repro.engine.incremental import (
 )
 from repro.graphs.delta import GraphDelta
 from repro.graphs.graph import Graph, check_permutation, rank_to_order
+from repro.obs.trace import Tracer, tspan
 from repro.serving.cache import ResultCache
 from repro.serving.scheduler import Scheduler, canon, family_key
 from repro.serving.stats import ServerStats
@@ -261,6 +262,13 @@ class GraphServer:
     reorder_patience : consecutive order swaps with no measured
         rounds-per-query win before the per-tenant auto-tuner disables
         reordering for that tenant (`ServerStats.reorders_disabled`).
+    trace : optional `repro.obs.Tracer` shared by the serving loop and the
+        per-family engine sessions. The server emits ``delta_apply`` spans,
+        ``reorder_swap`` / ``resolve`` events, and forwards the tracer to
+        each `AsyncBlockSession` (``pack`` / ``batch`` / ``sweep_call``
+        spans tagged with tenant, family, and graph version). Tracing is
+        batch-granular: under ``transfer_guard="disallow"`` it adds no
+        device->host transfers beyond the audited per-batch readout.
     """
 
     def __init__(
@@ -277,6 +285,7 @@ class GraphServer:
         reorder_threshold: float = 0.0,
         reorder_regions: int = 8,
         reorder_patience: int = 2,
+        trace: Optional[Tracer] = None,
     ) -> None:
         if refill not in ("continuous", "static"):
             raise ValueError(f"unknown refill mode {refill!r}")
@@ -310,6 +319,11 @@ class GraphServer:
             )
         if delta_mode not in ("warm", "restart"):
             raise ValueError(f"unknown delta_mode {delta_mode!r}")
+        if trace is not None and not isinstance(trace, Tracer):
+            raise TypeError(
+                f"trace must be a repro.obs.Tracer or None, "
+                f"got {type(trace).__name__}"
+            )
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if rounds_per_batch < 1:
@@ -353,6 +367,7 @@ class GraphServer:
         self.push_threshold = push_threshold
         self.scheduler = Scheduler(policy)
         self.cache = ResultCache(max_bytes=cache_max_bytes) if cache else None
+        self.trace = trace
         self.stats = ServerStats(slots=slots)
         # LIVE (queued/running) tickets only: terminal transitions drop the
         # entry so a long-running server doesn't retain every (n,) result
@@ -435,7 +450,7 @@ class GraphServer:
         )
         self._next_id += 1
         self.tickets[t.id] = t
-        self.stats.record_submit()
+        self.stats.record_submit(tenant=tenant)
         if self.cache is not None:
             entry = self.cache.get(
                 (tenant, algo, canon(params)), ten.graph_version
@@ -447,7 +462,12 @@ class GraphServer:
                 t.result = entry.x.copy()
                 t.resolved_at = self.stats.now()
                 self.tickets.pop(t.id, None)
-                self.stats.record_cache_hit()
+                self.stats.record_cache_hit(tenant=tenant, family=algo)
+                if self.trace is not None:
+                    self.trace.event(
+                        "resolve", tenant=tenant, algo=algo, rounds=0,
+                        converged=True, from_cache=True,
+                    )
                 return t
         self.scheduler.push(t)
         return t
@@ -525,6 +545,11 @@ class GraphServer:
             steps += 1
         return self.stats.summary()
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the server's metrics registry —
+        serve it verbatim from a ``/metrics`` endpoint."""
+        return self.stats.metrics_text()
+
     def apply_delta(self, delta: GraphDelta,
                     tenant: str = DEFAULT_TENANT) -> None:
         """Ingest a live graph mutation for one tenant between batches.
@@ -539,6 +564,12 @@ class GraphServer:
         same batch a delta lands simply runs on the new graph.
         """
         ten = self._tenant(tenant)
+        with tspan(self.trace, "delta_apply", tenant=tenant,
+                   graph_version=ten.graph_version + 1):
+            self._apply_delta_inner(delta, ten)
+
+    def _apply_delta_inner(self, delta: GraphDelta, ten: _Tenant) -> None:
+        tenant = ten.name
         g_new = delta.apply(ten.g)
         ten.graph_version += 1
         if self.cache is not None:
@@ -548,7 +579,7 @@ class GraphServer:
                 select=lambda key: key[0] == tenant,
             )
         ten.g = g_new
-        self.stats.deltas_applied += 1
+        self.stats.record_delta(tenant)
         rank_old = ten.rank
         if ten.rank is not None:
             # incremental order maintenance: place appended vertices (rank-
@@ -621,6 +652,14 @@ class GraphServer:
         if ten.tuner is not None:
             ten.tuner.note_swap()
         self.stats.record_reorder(ten.name)
+        if self.trace is not None:
+            # covers both entry points uniformly: explicit swap_order and
+            # the post-delta regional re-rank
+            self.trace.event(
+                "reorder_swap", tenant=ten.name,
+                graph_version=ten.graph_version,
+                swaps=0 if ten.tuner is None else ten.tuner.swaps,
+            )
 
     # constructor params that name vertices; validated against the CURRENT
     # graph at swap-in time — numpy would otherwise accept a negative id
@@ -651,7 +690,7 @@ class GraphServer:
         t.error = f"{type(err).__name__}: {err}"
         t.resolved_at = self.stats.now()
         self.tickets.pop(t.id, None)
-        self.stats.record_fail()
+        self.stats.record_fail(tenant=t.tenant)
 
     def _make_family(self, key: tuple, tenant: str,
                      probe: AlgoInstance) -> _Family:
@@ -675,6 +714,11 @@ class GraphServer:
         session = AsyncBlockSession(
             idle, bs=self.bs, inner=self.inner, backend=self.backend,
             sweeps_per_call=self.sweeps_per_call,
+            trace=self.trace,
+            trace_attrs={
+                "tenant": tenant, "family": probe.name,
+                "graph_version": ten.graph_version,
+            },
         )
         return _Family(
             key=key, tenant=tenant, probe=probe, session=session,
@@ -776,6 +820,11 @@ class GraphServer:
         t.graph_version = self._tenant(t.tenant).graph_version
         self.tickets.pop(t.id, None)
         self.stats.record_resolve(t)
+        if self.trace is not None:
+            self.trace.event(
+                "resolve", tenant=t.tenant, algo=t.algo, rounds=t.rounds,
+                converged=converged, graph_version=t.graph_version,
+            )
         if self.cache is not None and converged:
             support = harness.column_support(
                 q.x0[:, 0], q.c[:, 0], q.fixed[:, 0],

@@ -1,0 +1,33 @@
+"""Seeded observability-hot-path violations for the repro-lint self-tests.
+
+Never imported — tests feed this file to the checker as source. It models
+the bug class the tracing layer's contract forbids (`repro.obs.trace`):
+span/metric attribute values must already be host scalars, so an implicit
+coercion of a jax array *at the recording call site* is a hidden
+device->host sync. Line numbers are asserted exactly in
+tests/test_repro_lint.py; edit with care.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def record_batch_span(tracer, deltas):
+    deltas = jnp.asarray(deltas)
+    with tracer.span("sweep_call", sweeps=4) as sp:
+        sp.set(max_delta=float(jnp.max(deltas)))
+    return sp
+
+
+def record_metric_observation(hist, state):
+    state = jnp.asarray(state)
+    hist.observe(state.sum().item(), tenant="default")
+
+
+def audited_readout_stays_quiet(tracer, deltas):
+    deltas_np = np.asarray(
+        jax.device_get(deltas)  # repro: allow-host-sync(batch trace readout)
+    )
+    with tracer.span("sweep_call") as sp:
+        sp.set(max_delta=float(np.max(deltas_np)))
+    return sp

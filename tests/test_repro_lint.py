@@ -59,6 +59,33 @@ def test_host_sync_fixture_exact_findings():
     assert not any(f.line >= 32 for f in findings)
 
 
+def test_host_sync_obs_fixture_exact_findings():
+    """The observability contract is checkable: a recording call site that
+    coerces a jax value into a span attr / metric observation is the HS001/
+    HS002 bug class, while the audited device_get + host-scalar pattern the
+    real hot paths use stays silent."""
+    findings = host_sync.check_source(
+        _read("obs_fixture.py"), "obs_fixture.py"
+    )
+    got = sorted((f.rule, f.line) for f in findings)
+    assert got == [
+        ("HS001", 18),   # sp.set(max_delta=float(jnp.max(deltas)))
+        ("HS002", 24),   # hist.observe(state.sum().item(), ...)
+    ]
+
+
+def test_obs_modules_are_hot_paths():
+    """src/repro/obs/*.py (and the serving stats module) are inside the
+    checker's hot-path globs — the zero-sync tracing contract is enforced,
+    not aspirational."""
+    import fnmatch
+
+    for rel in ("src/repro/obs/trace.py", "src/repro/obs/telemetry.py",
+                "src/repro/serving/stats.py"):
+        assert any(fnmatch.fnmatch(rel, g)
+                   for g in host_sync.HOT_PATH_GLOBS), rel
+
+
 def test_pragma_covers_multiline_expression():
     src = "\n".join([
         "import jax",

@@ -49,13 +49,20 @@ from tools.check.common import Finding, apply_pragmas, attr_chain, parse_pragmas
 
 CHECKER = "host-sync"
 
-# Hot-path modules under the residency contract (repo-relative).
+# Hot-path modules under the residency contract (repo-relative). The
+# observability layer and every module with trace-recording hooks are in
+# scope: a span attribute that implicitly coerces a jax array is exactly
+# the hidden-D2H class this checker exists to catch.
 HOT_PATH_GLOBS = (
     "src/repro/core/gograph.py",
     "src/repro/core/metric.py",
+    "src/repro/engine/api.py",
     "src/repro/engine/async_block.py",
     "src/repro/engine/harness.py",
+    "src/repro/engine/push.py",
+    "src/repro/obs/*.py",
     "src/repro/serving/server.py",
+    "src/repro/serving/stats.py",
     "src/repro/kernels/*.py",
 )
 
